@@ -1,0 +1,55 @@
+"""Roofline table builder: reads dry-run artifacts (benchmarks/artifacts/
+dryrun/*.json) and emits the per-(arch x shape) three-term roofline rows
+used in EXPERIMENTS.md §Roofline."""
+
+from __future__ import annotations
+
+import json
+import pathlib
+
+ART = pathlib.Path(__file__).resolve().parent / "artifacts" / "dryrun"
+
+
+def load_cells(mesh: str = "256"):
+    cells = {}
+    for f in sorted(ART.glob(f"*__{mesh}.json")):
+        rec = json.loads(f.read_text())
+        cells[(rec["arch"], rec["shape"])] = rec
+    return cells
+
+
+def rows(mesh: str = "256"):
+    out = [(
+        "arch", "shape", "status", "t_compute_s", "t_memory_s",
+        "t_collective_s", "dominant", "model_flops", "hlo_flops_global",
+        "useful_ratio", "peak_arg_GB", "temp_GB",
+    )]
+    for (arch, shape), rec in sorted(load_cells(mesh).items()):
+        if "error" in rec:
+            out.append((arch, shape, "ERROR", *[""] * 9))
+            continue
+        if "skipped" in rec:
+            out.append((arch, shape, f"skip:{rec['skipped']}", *[""] * 9))
+            continue
+        r = rec["roofline"]
+        cc = rec.get("cost_corrected", rec["cost"])
+        global_flops = cc["flops"] * rec["chips"]
+        out.append((
+            arch, shape, "ok",
+            f"{r['t_compute_s']:.4g}", f"{r['t_memory_s']:.4g}",
+            f"{r['t_collective_s']:.4g}", r["dominant"],
+            f"{rec['model_flops']:.3e}", f"{global_flops:.3e}",
+            f"{rec['model_flops'] / global_flops:.3f}",
+            f"{(rec['memory']['argument_bytes'] or 0) / 2**30:.1f}",
+            f"{(rec['memory']['temp_bytes'] or 0) / 2**30:.1f}",
+        ))
+    return out
+
+
+def bottleneck_summary(mesh: str = "256"):
+    counts: dict[str, int] = {}
+    for rec in load_cells(mesh).values():
+        if "roofline" in rec:
+            d = rec["roofline"]["dominant"]
+            counts[d] = counts.get(d, 0) + 1
+    return counts

@@ -1,0 +1,36 @@
+"""Benchmark entry point: one function per paper table/figure + the LM
+roofline table from dry-run artifacts.  Prints CSV blocks.
+
+  PYTHONPATH=src python -m benchmarks.run            # everything
+  PYTHONPATH=src python -m benchmarks.run fig13      # one benchmark
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from . import paper_figures, roofline
+
+    want = sys.argv[1] if len(sys.argv) > 1 else None
+    for name, fn in paper_figures.ALL.items():
+        if want and want not in name:
+            continue
+        t0 = time.perf_counter()
+        rows = fn()
+        dt = time.perf_counter() - t0
+        print(f"\n# {name}  ({dt:.1f}s)")
+        for row in rows:
+            print(",".join(str(x) for x in row))
+
+    if want is None or "roofline" in want:
+        print("\n# roofline_single_pod (from dry-run artifacts)")
+        for row in roofline.rows("256"):
+            print(",".join(str(x) for x in row))
+        print("\n# dominant bottleneck counts:", roofline.bottleneck_summary())
+
+
+if __name__ == "__main__":
+    main()

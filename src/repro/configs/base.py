@@ -1,0 +1,172 @@
+"""Architecture config schema + input specs for the assigned shape cells.
+
+Every architecture is described by one :class:`ArchConfig`; heterogeneous
+stacks (Jamba groups, DeepSeek dense-prefix) are expressed as ``stacks`` —
+a list of (repeat, [LayerSpec...]) scanned groups, which keeps the lowered
+HLO size O(distinct layer kinds), not O(depth).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    """One layer inside a scanned group."""
+
+    mixer: str          # gqa | mla | mamba | mlstm | slstm
+    ffn: str            # swiglu | gelu | moe | none
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                      # dense | moe | ssm | hybrid | vlm | audio
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    stacks: tuple                    # ((repeat, (LayerSpec, ...)), ...)
+    d_head: int = 0                  # 0 -> d_model // n_heads
+
+    # attention
+    qkv_bias: bool = False
+    rope_theta: float = 10_000.0
+    window: int = 0                  # sliding-window size (0 = full)
+
+    # MLA (DeepSeek-V3)
+    mla_q_rank: int = 1536
+    mla_kv_rank: int = 512
+    mla_nope_dim: int = 128
+    mla_rope_dim: int = 64
+    mla_v_dim: int = 128
+
+    # MoE
+    moe_experts: int = 0
+    moe_top_k: int = 0
+    moe_shared: int = 0
+    moe_d_ff: int = 0
+    moe_capacity: float = 1.25
+    moe_dispatch: str = "shard_map"  # shard_map (EP) | gather | onehot
+    # inference expert placement: experts sharded over (model x data) with
+    # whole experts per chip and the small decode token batch replicated —
+    # removes the per-step FSDP weight all-gathers (EXPERIMENTS.md §Perf
+    # iteration 6).  Set by the serve path; training keeps EP over model.
+    inference_ep: bool = False
+    aux_loss_weight: float = 0.01
+
+    # Mamba
+    mamba_d_inner: int = 0
+    mamba_d_state: int = 16
+    mamba_d_conv: int = 4
+    mamba_dt_rank: int = 0
+    mamba_chunk: int = 128
+
+    # xLSTM
+    xlstm_d_inner: int = 0
+    xlstm_chunk: int = 64
+
+    # frontends (STUBS per assignment: precomputed embeddings)
+    frontend: Optional[str] = None   # vision | audio | None
+    frontend_tokens: int = 0         # e.g. image patches prepended
+
+    # norms / misc
+    norm: str = "rms"                # rms | ln
+    tie_embeddings: bool = False
+    dtype: str = "bfloat16"
+    remat: str = "full"              # none | full
+    # unroll scanned stacks into straight-line HLO.  scan keeps compiles
+    # fast; unroll makes cost_analysis trip-count-exact (XLA counts a
+    # while-loop body once) — the dry-run lowers both variants.
+    layer_unroll: bool = False
+    # sub-quadratic? (decides long_500k applicability)
+    subquadratic: bool = False
+
+    # ------------------------------------------------------------------
+    @property
+    def head_dim(self) -> int:
+        return self.d_head or (self.d_model // self.n_heads)
+
+    @property
+    def n_layers(self) -> int:
+        return sum(r * len(specs) for r, specs in self.stacks)
+
+    @property
+    def activation_dtype(self):
+        return jnp.bfloat16 if self.dtype == "bfloat16" else jnp.float32
+
+    def param_count(self) -> int:
+        """Analytic parameter count (used for 6ND roofline maths)."""
+        from repro.models.transformer import init_abstract
+
+        leaves = jax.tree.leaves(init_abstract(self))
+        return int(sum(int(np.prod(l.shape)) for l in leaves))
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: shared + top_k experts only)."""
+        total = self.param_count()
+        if self.moe_experts == 0:
+            return total
+        expert_p = 3 * self.d_model * self.moe_d_ff
+        n_moe_layers = sum(
+            r * sum(1 for s in specs if s.ffn == "moe") for r, specs in self.stacks
+        )
+        inactive = n_moe_layers * (self.moe_experts - self.moe_top_k) * expert_p
+        return total - inactive
+
+
+# ======================================================================
+# shape cells (assignment: 4 shapes per LM arch)
+# ======================================================================
+SHAPES = {
+    "train_4k": dict(kind="train", seq_len=4_096, global_batch=256),
+    "prefill_32k": dict(kind="prefill", seq_len=32_768, global_batch=32),
+    "decode_32k": dict(kind="decode", seq_len=32_768, global_batch=128),
+    "long_500k": dict(kind="decode", seq_len=524_288, global_batch=1),
+}
+
+
+def input_specs(cfg: ArchConfig, shape: str, *, reduced: bool = False):
+    """ShapeDtypeStruct stand-ins for every model input of a shape cell.
+
+    ``train``/``prefill``: token batch (+ stub frontend embeddings).
+    ``decode``: one new token against a KV/state cache of seq_len.
+    """
+    info = SHAPES[shape]
+    s, b = info["seq_len"], info["global_batch"]
+    if reduced:
+        s, b = min(s, 256), min(b, 4)
+    i32 = jnp.int32
+    specs: dict = {}
+    if info["kind"] in ("train", "prefill"):
+        n_front = cfg.frontend_tokens if cfg.frontend else 0
+        s_tok = s - n_front
+        specs["tokens"] = jax.ShapeDtypeStruct((b, s_tok), i32)
+        if info["kind"] == "train":
+            specs["labels"] = jax.ShapeDtypeStruct((b, s_tok), i32)
+        if cfg.frontend:
+            specs["frontend_embeds"] = jax.ShapeDtypeStruct(
+                (b, n_front, cfg.d_model), cfg.activation_dtype
+            )
+    else:  # decode
+        specs["tokens"] = jax.ShapeDtypeStruct((b, 1), i32)
+        specs["cache_len"] = jax.ShapeDtypeStruct((), i32)
+    return specs, info
+
+
+def decode_cache_specs(cfg: ArchConfig, shape: str, *, reduced: bool = False):
+    """ShapeDtypeStructs of the decode cache for a shape cell."""
+    from repro.models.transformer import init_cache_abstract
+
+    info = SHAPES[shape]
+    s, b = info["seq_len"], info["global_batch"]
+    if reduced:
+        s, b = min(s, 256), min(b, 4)
+    return init_cache_abstract(cfg, b, s)

@@ -1,0 +1,59 @@
+"""Core paper contribution: SNN compilation to neuromorphic hardware.
+
+Pipeline (paper Fig. 2):
+  SNN (apps.py / snn.py)
+    -> spike recording (lif.py; or calibrated counts)
+    -> crossbar-aware clustering (partition.py, Alg. 1)
+    -> SDFG (sdfg.py) + Max-Plus analysis (maxplus.py, Eq. 6)
+    -> binding (binding.py, Eq. 7) + static-order scheduling (schedule.py)
+    -> run-time admission via self-timed execution (runtime.py, Lemma 1)
+"""
+
+from .apps import APP_NAMES, APP_SPECS, all_apps, build_app, small_app
+from .binding import (
+    BindingResult,
+    LoadWeights,
+    bind_ours,
+    bind_pycarl,
+    bind_spinemap,
+    cut_spikes,
+)
+from .hardware import (
+    DYNAP_SE,
+    DYNAP_SE_9,
+    DYNAP_SE_16,
+    CrossbarConfig,
+    HardwareConfig,
+    TileConfig,
+    hardware_by_name,
+)
+from .lif import LIFParams, simulate_spikes, with_simulated_spikes
+from .maxplus import (
+    maxplus_matrix,
+    mcm_power_iteration,
+    mcr_binary_search,
+    mcr_howard,
+    throughput,
+)
+from .partition import Cluster, ClusteredSNN, partition_greedy
+from .runtime import (
+    CompileReport,
+    HardwareState,
+    design_time_compile,
+    project_order,
+    runtime_admit,
+    single_tile_order,
+    verify_deadlock_free,
+)
+from .schedule import (
+    ExecutionTrace,
+    SelfTimedExecutor,
+    analyze_throughput,
+    build_static_orders,
+    measured_throughput,
+    random_orders,
+)
+from .sdfg import SDFG, Channel, hardware_aware_sdfg, sdfg_from_clusters
+from .snn import SNN, calibrate_spikes, feedforward
+
+__all__ = [k for k in dir() if not k.startswith("_")]

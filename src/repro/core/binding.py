@@ -1,0 +1,190 @@
+"""Cluster-to-tile binding strategies (paper §4.2, §6.3).
+
+Three strategies are evaluated, mirroring the paper:
+
+  * :func:`bind_ours`     — Eq. 7 weighted load + std-dev-reducing pairwise
+    swaps (the paper's proposed load balancer).
+  * :func:`bind_pycarl`   — PyCARL [5]: balance tile load greedily (largest
+    load first onto least-loaded tile); random execution order downstream.
+  * :func:`bind_spinemap` — SpiNeMap [8]: minimize inter-tile spike traffic
+    with Kernighan-Lin-style swaps; ignores load balance.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from .hardware import HardwareConfig
+from .partition import ClusteredSNN
+
+
+@dataclasses.dataclass(frozen=True)
+class LoadWeights:
+    """User constants (a, b, c, d) of Eq. 7."""
+
+    crossbar: float = 1.0
+    buffer: float = 1.0
+    connection: float = 1.0
+    bandwidth: float = 1.0
+
+
+@dataclasses.dataclass
+class BindingResult:
+    binding: np.ndarray          # (n_clusters,) tile id
+    bind_time_s: float
+    strategy: str
+
+    def clusters_per_tile(self, n_tiles: int) -> np.ndarray:
+        return np.bincount(self.binding, minlength=n_tiles)
+
+
+def _cluster_loads(c: ClusteredSNN, w: LoadWeights, hw: HardwareConfig) -> np.ndarray:
+    """Scalar Eq.-7 load per cluster (normalized per-resource)."""
+    xbar = hw.tile.crossbar
+    conn = np.zeros(c.n_clusters)
+    for (i, j), _ in c.channel_spikes.items():
+        conn[i] += 1
+        conn[j] += 1
+    return (
+        w.crossbar * (c.inputs_used + c.neurons_used) / (xbar.inputs + xbar.outputs)
+        + w.buffer * c.out_spikes / hw.tile.output_buffer
+        + w.connection * conn / max(conn.max(initial=1.0), 1.0)
+        + w.bandwidth
+        * (c.in_spikes + c.out_spikes)
+        / max((c.in_spikes + c.out_spikes).max(initial=1.0), 1.0)
+    )
+
+
+def bind_ours(
+    c: ClusteredSNN,
+    hw: HardwareConfig,
+    *,
+    weights: LoadWeights = LoadWeights(),
+    max_pass: int = 4,
+    rng_seed: int = 0,
+) -> BindingResult:
+    """Eq. 7 load balancing with std-dev-reducing pairwise swaps."""
+    t0 = time.perf_counter()
+    loads = _cluster_loads(c, weights, hw)
+    n_tiles = hw.n_tiles
+
+    # even initial distribution (round-robin over load-sorted clusters)
+    order = np.argsort(loads)[::-1]
+    binding = np.empty(c.n_clusters, dtype=np.int64)
+    binding[order] = np.arange(c.n_clusters) % n_tiles
+
+    tile_load = np.bincount(binding, weights=loads, minlength=n_tiles)
+
+    rng = np.random.default_rng(rng_seed)
+    n = c.n_clusters
+    for _ in range(max_pass):
+        improved = False
+        # sweep cluster pairs; for large n sample pairs (documented bound)
+        if n * n <= 250_000:
+            pairs = [(i, j) for i in range(n) for j in range(i + 1, n)]
+        else:
+            idx = rng.integers(0, n, size=(250_000, 2))
+            pairs = [(int(a), int(b)) for a, b in idx if a != b]
+        std = tile_load.std()
+        for i, j in pairs:
+            ti, tj = binding[i], binding[j]
+            if ti == tj:
+                continue
+            li, lj = loads[i], loads[j]
+            new_ti = tile_load[ti] - li + lj
+            new_tj = tile_load[tj] - lj + li
+            delta_sq = (
+                new_ti**2 + new_tj**2 - tile_load[ti] ** 2 - tile_load[tj] ** 2
+            )
+            if delta_sq < -1e-12:  # std reduces iff sum of squares reduces
+                tile_load[ti], tile_load[tj] = new_ti, new_tj
+                binding[i], binding[j] = tj, ti
+                improved = True
+        new_std = tile_load.std()
+        if not improved or std - new_std < 1e-12:
+            break
+    return BindingResult(binding, time.perf_counter() - t0, "ours")
+
+
+def bind_pycarl(
+    c: ClusteredSNN,
+    hw: HardwareConfig,
+    *,
+    weights: LoadWeights = LoadWeights(),
+) -> BindingResult:
+    """PyCARL: greedy load balance (LPT), random order downstream."""
+    t0 = time.perf_counter()
+    loads = _cluster_loads(c, weights, hw)
+    binding = np.empty(c.n_clusters, dtype=np.int64)
+    tile_load = np.zeros(hw.n_tiles)
+    for i in np.argsort(loads)[::-1]:
+        t = int(np.argmin(tile_load))
+        binding[i] = t
+        tile_load[t] += loads[i]
+    return BindingResult(binding, time.perf_counter() - t0, "pycarl")
+
+
+def bind_spinemap(
+    c: ClusteredSNN,
+    hw: HardwareConfig,
+    *,
+    max_pass: int = 4,
+    rng_seed: int = 0,
+) -> BindingResult:
+    """SpiNeMap: minimize inter-tile spikes (KL-style single moves/swaps)."""
+    t0 = time.perf_counter()
+    n, n_tiles = c.n_clusters, hw.n_tiles
+    rng = np.random.default_rng(rng_seed)
+
+    # adjacency (symmetric spike traffic between cluster pairs)
+    pairs = list(c.channel_spikes.items())
+    src = np.array([p[0][0] for p in pairs], dtype=np.int64)
+    dst = np.array([p[0][1] for p in pairs], dtype=np.int64)
+    spk = np.array([p[1] for p in pairs])
+
+    # seed: contiguous ranges (clusters are index-ordered along layers, so
+    # this already groups communicating clusters together)
+    binding = (np.arange(n) * n_tiles // max(n, 1)).astype(np.int64)
+
+    def move_gain(x: int, to: int) -> float:
+        """Reduction in cut spikes when moving cluster x to tile `to`."""
+        own = binding[x]
+        if own == to:
+            return 0.0
+        mask_s = src == x
+        mask_d = dst == x
+        cur = spk[mask_s][binding[dst[mask_s]] != own].sum() + spk[mask_d][
+            binding[src[mask_d]] != own
+        ].sum()
+        new = spk[mask_s][binding[dst[mask_s]] != to].sum() + spk[mask_d][
+            binding[src[mask_d]] != to
+        ].sum()
+        return float(cur - new)
+
+    cap = int(np.ceil(1.5 * n / n_tiles))  # loose balance cap only
+    counts = np.bincount(binding, minlength=n_tiles)
+    for _ in range(max_pass):
+        improved = False
+        for x in rng.permutation(n)[: min(n, 2000)]:
+            gains = [(move_gain(int(x), t), t) for t in range(n_tiles)]
+            g, t = max(gains)
+            if g > 1e-9 and counts[t] < cap:
+                counts[binding[x]] -= 1
+                counts[t] += 1
+                binding[x] = t
+                improved = True
+        if not improved:
+            break
+    return BindingResult(binding, time.perf_counter() - t0, "spinemap")
+
+
+def cut_spikes(c: ClusteredSNN, binding: np.ndarray) -> float:
+    """Total inter-tile spike traffic of a binding (SpiNeMap's objective)."""
+    total = 0.0
+    for (i, j), r in c.channel_spikes.items():
+        if binding[i] != binding[j]:
+            total += r
+    return total

@@ -1,0 +1,108 @@
+"""Neuromorphic hardware model (DYNAP-SE-like tiled crossbar chip).
+
+The paper (§4.1, §6.1) models DYNAP-SE [51]: a tiled array of crossbars
+connected by a mesh NoC using the AER protocol.  Each tile has
+
+  * one crossbar with ``crossbar_inputs`` row wires and ``crossbar_outputs``
+    column wires (128x128 on DYNAP-SE, 65,536 OxRAM crosspoints),
+  * an input buffer and an output buffer (spike packets),
+  * a network interface serializing AER packets on the interconnect.
+
+Timing constants are modeled from the paper's cited sources: the execution
+time of a cluster firing is the current-propagation delay through an OxRAM
+synapse array (Mallik et al. [49]; Garbin et al. [36] for HfO2 devices) and
+the AER link serializes one spike packet per ``t_spike_link`` on the mesh.
+Absolute scales are configurable; every benchmark reports *normalized*
+throughput exactly like the paper, which is invariant to the absolute unit.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+
+@dataclasses.dataclass(frozen=True)
+class CrossbarConfig:
+    """Resource constraints of a single crossbar (the bin in Alg. 1)."""
+
+    inputs: int = 128          # row wires = max distinct pre-synaptic sources
+    outputs: int = 128         # column wires = max neurons per cluster
+    crosspoints: int = 128 * 128  # OxRAM cells = max synapses per cluster
+
+    def fits(self, n_inputs: int, n_neurons: int, n_synapses: int) -> bool:
+        return (
+            n_inputs <= self.inputs
+            and n_neurons <= self.outputs
+            and n_synapses <= self.crosspoints
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class TileConfig:
+    """A tile: crossbar + IO buffers + network interface."""
+
+    crossbar: CrossbarConfig = CrossbarConfig()
+    input_buffer: int = 4096    # spike packets
+    output_buffer: int = 4096   # spike packets
+    # NoC connections available per tile (mesh: N/E/S/W + local).
+    connections: int = 4
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareConfig:
+    """A tiled neuromorphic chip (Fig. 7)."""
+
+    n_tiles: int = 4
+    tile: TileConfig = TileConfig()
+
+    # --- timing model (microseconds) ------------------------------------
+    # Crossbar current-propagation delay per firing (OxRAM read, [49]).
+    t_fire: float = 4.0
+    # AER encode/serialize per spike packet at the source NI.  Calibrated so
+    # the model reproduces the paper's measured regime (Table 2: 5-23%
+    # bandwidth utilization — compute/TDMA-bound, not comm-bound).
+    t_spike_encode: float = 0.001
+    # Mesh link time per spike packet per hop (~500 Mevents/s/link).
+    t_spike_link: float = 0.002
+    # Fixed per-message NoC latency (route setup), per channel per firing.
+    t_route: float = 0.05
+
+    @property
+    def mesh_dim(self) -> int:
+        return max(1, math.isqrt(self.n_tiles))
+
+    def hops(self, src_tile: int, dst_tile: int) -> int:
+        """Manhattan hop count on the 2D mesh NoC."""
+        if src_tile == dst_tile:
+            return 0
+        d = self.mesh_dim
+        sx, sy = src_tile % d, src_tile // d
+        dx, dy = dst_tile % d, dst_tile // d
+        return abs(sx - dx) + abs(sy - dy)
+
+    def comm_delay(self, n_spikes: float, src_tile: int, dst_tile: int) -> float:
+        """Time to move ``n_spikes`` AER packets from src to dst tile."""
+        if src_tile == dst_tile:
+            return 0.0
+        hops = self.hops(src_tile, dst_tile)
+        # Pipelined wormhole: serialization dominates, one extra link time/hop.
+        return (
+            self.t_route
+            + n_spikes * (self.t_spike_encode + self.t_spike_link)
+            + (hops - 1) * self.t_spike_link
+        )
+
+
+# The three hardware models evaluated in the paper (§6.1, Fig. 16).
+DYNAP_SE = HardwareConfig(n_tiles=4)
+DYNAP_SE_9 = HardwareConfig(n_tiles=9)
+DYNAP_SE_16 = HardwareConfig(n_tiles=16)
+
+
+def hardware_by_name(name: str) -> HardwareConfig:
+    table = {"dynap-se": DYNAP_SE, "dynap-se-9": DYNAP_SE_9, "dynap-se-16": DYNAP_SE_16}
+    try:
+        return table[name.lower()]
+    except KeyError:  # pragma: no cover - defensive
+        raise ValueError(f"unknown hardware model {name!r}; have {sorted(table)}")

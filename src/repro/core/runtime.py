@@ -1,0 +1,192 @@
+"""Run-time resource management (paper §5).
+
+Design time:  build ONE single-tile static-order schedule (all actors bound
+to tile 0, FCFS self-timed execution records the total order); discard exact
+timings, keep the order.
+
+Run time:  when an application is admitted, (1) bind clusters to the tiles
+currently available (§4.2 load balancing restricted to free tiles), then
+(2) *project* the single-tile order onto each tile — Lemma 1 guarantees the
+resulting multi-tile schedule is deadlock-free — and execute self-timed.
+No per-tile schedule is constructed from scratch, which is where ~75% of
+compilation time goes (§7.3), so admission is fast (Table 3).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+import numpy as np
+
+from .binding import BindingResult, LoadWeights, bind_ours
+from .hardware import HardwareConfig
+from .partition import ClusteredSNN
+from .schedule import (
+    SelfTimedExecutor,
+    analyze_throughput,
+    build_static_orders,
+)
+from .sdfg import SDFG, sdfg_from_clusters
+
+
+@dataclasses.dataclass
+class CompileReport:
+    """One compiled application: binding + schedules + predicted throughput."""
+
+    app: str
+    binding: np.ndarray
+    orders: list[list[int]]
+    throughput: float
+    bind_time_s: float
+    schedule_time_s: float
+
+    @property
+    def compile_time_s(self) -> float:
+        return self.bind_time_s + self.schedule_time_s
+
+
+# ======================================================================
+# design-time flow (§4): bind -> per-tile static orders -> analysis
+# ======================================================================
+def design_time_compile(
+    clustered: ClusteredSNN,
+    hw: HardwareConfig,
+    *,
+    binder=bind_ours,
+    weights: LoadWeights = LoadWeights(),
+    sim_iterations: int = 12,
+) -> CompileReport:
+    app = sdfg_from_clusters(clustered, hw=hw)
+    try:
+        bres: BindingResult = binder(clustered, hw, weights=weights)
+    except TypeError:  # binders with no `weights` kw (spinemap)
+        bres = binder(clustered, hw)
+    orders, t_sched = build_static_orders(
+        app, bres.binding, hw, iterations=sim_iterations
+    )
+    thr = analyze_throughput(app, bres.binding, hw, orders)
+    return CompileReport(
+        app=clustered.snn.name,
+        binding=bres.binding,
+        orders=orders,
+        throughput=thr,
+        bind_time_s=bres.bind_time_s,
+        schedule_time_s=t_sched,
+    )
+
+
+# ======================================================================
+# single-tile schedule (design time, once per application)
+# ======================================================================
+def single_tile_order(
+    clustered: ClusteredSNN, hw: HardwareConfig, *, sim_iterations: int = 8
+) -> tuple[list[int], float]:
+    """Total actor order from a 1-tile execution of the application."""
+    t0 = time.perf_counter()
+    one_tile = dataclasses.replace(hw, n_tiles=1)
+    app = sdfg_from_clusters(clustered, hw=one_tile)
+    binding = np.zeros(clustered.n_clusters, dtype=np.int64)
+    orders, _ = build_static_orders(app, binding, one_tile,
+                                    iterations=sim_iterations)
+    return orders[0], time.perf_counter() - t0
+
+
+def project_order(
+    order: list[int], binding: np.ndarray, n_tiles: int
+) -> list[list[int]]:
+    """Lemma 1: per-tile orders = the single-tile order filtered per tile.
+
+    Keeping the relative firing order unchanged preserves deadlock freedom
+    (Blazewicz 1976 via [12]); Fig. 12 illustrates exactly this projection.
+    """
+    binding = np.asarray(binding)
+    per_tile = [[a for a in order if binding[a] == t] for t in range(n_tiles)]
+    # any actor missing from the order (defensive) is appended at the end
+    seen = {a for o in per_tile for a in o}
+    for a in range(len(binding)):
+        if a not in seen:
+            per_tile[int(binding[a])].append(a)
+    return per_tile
+
+
+# ======================================================================
+# run-time admission (§5, Fig. 11)
+# ======================================================================
+@dataclasses.dataclass
+class HardwareState:
+    """Tracks which tiles are currently allocated to running applications."""
+
+    hw: HardwareConfig
+    allocated: dict[str, list[int]] = dataclasses.field(default_factory=dict)
+
+    def free_tiles(self) -> list[int]:
+        used = {t for tiles in self.allocated.values() for t in tiles}
+        return [t for t in range(self.hw.n_tiles) if t not in used]
+
+    def release(self, app: str) -> None:
+        self.allocated.pop(app, None)
+
+
+def runtime_admit(
+    clustered: ClusteredSNN,
+    state: HardwareState,
+    single_order: list[int],
+    *,
+    n_tiles_request: Optional[int] = None,
+    weights: LoadWeights = LoadWeights(),
+) -> CompileReport:
+    """Admit an application onto the currently-free tiles (Fig. 11).
+
+    Binding runs on the free-tile subset; per-tile schedules are *projected*
+    from the design-time single-tile order (no construction from scratch).
+    """
+    free = state.free_tiles()
+    if not free:
+        raise RuntimeError("no free tiles: admission rejected")
+    if n_tiles_request is not None:
+        free = free[:n_tiles_request]
+
+    t0 = time.perf_counter()
+    # bind on a virtual hardware with |free| tiles, then relabel to real ids
+    sub_hw = dataclasses.replace(state.hw, n_tiles=len(free))
+    bres = bind_ours(clustered, sub_hw, weights=weights)
+    t_bind = time.perf_counter() - t0
+
+    t1 = time.perf_counter()
+    sub_orders = project_order(single_order, bres.binding, len(free))
+    t_sched = time.perf_counter() - t1
+
+    # relabel virtual tiles -> physical free tiles
+    phys_binding = np.array([free[t] for t in bres.binding], dtype=np.int64)
+    phys_orders: list[list[int]] = [[] for _ in range(state.hw.n_tiles)]
+    for virt, phys in enumerate(free):
+        phys_orders[phys] = sub_orders[virt]
+
+    app = sdfg_from_clusters(clustered, hw=state.hw)
+    thr = analyze_throughput(app, phys_binding, state.hw, phys_orders)
+    state.allocated[clustered.snn.name] = list(free)
+    return CompileReport(
+        app=clustered.snn.name,
+        binding=phys_binding,
+        orders=phys_orders,
+        throughput=thr,
+        bind_time_s=t_bind,
+        schedule_time_s=t_sched,
+    )
+
+
+def verify_deadlock_free(
+    clustered: ClusteredSNN,
+    hw: HardwareConfig,
+    report: CompileReport,
+    *,
+    iterations: int = 6,
+) -> bool:
+    """Operational Lemma-1 check: the projected schedule must complete."""
+    app = sdfg_from_clusters(clustered, hw=hw)
+    trace = SelfTimedExecutor(
+        app, report.binding, hw, orders=report.orders
+    ).run(iterations=iterations)
+    return trace.period > 0

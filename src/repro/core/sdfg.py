@@ -1,0 +1,181 @@
+"""Synchronous Dataflow Graph IR for clustered SNNs (paper §3, §4).
+
+Because every spike produced on a channel is consumed by the destination
+actor within one application iteration, the repetition vector of a clustered
+SNN is all-ones (§3.1, Def. 3) — i.e. the SDFG is a *timed event graph*
+(homogeneous SDFG).  We therefore represent channels directly with an
+integer *marking* (initial tokens, in units of actor firings) and a real
+*delay* (AER communication latency), which is exactly the structure Max-Plus
+Algebra analyzes (§3.2).
+
+The hardware-aware transformation (§4.4) adds:
+  * back-edges with ``floor(buffer / rate)`` initial tokens  (Step 1),
+  * TDMA static-order edges per tile                         (Step 2),
+  * inter-tile channel delays from the NoC model             (Step 1/3).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Optional, Sequence
+
+import numpy as np
+
+from .hardware import HardwareConfig
+from .partition import ClusteredSNN
+
+
+@dataclasses.dataclass(frozen=True)
+class Channel:
+    src: int
+    dst: int
+    tokens: int          # initial marking (units: firings)
+    rate: float          # spikes per firing on this channel (port rate)
+    delay: float = 0.0   # communication latency added to the dependency
+    kind: str = "data"   # data | buffer | order | self
+
+
+@dataclasses.dataclass
+class SDFG:
+    """Timed event graph: actors with execution times + marked channels."""
+
+    n_actors: int
+    exec_time: np.ndarray               # (n_actors,) tau_i
+    channels: list[Channel]
+    name: str = "sdfg"
+
+    def validate(self) -> None:
+        assert self.exec_time.shape == (self.n_actors,)
+        for ch in self.channels:
+            assert 0 <= ch.src < self.n_actors and 0 <= ch.dst < self.n_actors
+            assert ch.tokens >= 0
+
+    # -- liveness: every cycle must carry >= 1 token --------------------
+    def is_live(self) -> bool:
+        return _zero_token_subgraph_is_acyclic(self.n_actors, self.channels)
+
+    def edges_arrays(self):
+        """(src, dst, weight, tokens) arrays; weight = tau[dst] + delay."""
+        src = np.array([c.src for c in self.channels], dtype=np.int64)
+        dst = np.array([c.dst for c in self.channels], dtype=np.int64)
+        w = self.exec_time[dst] + np.array([c.delay for c in self.channels])
+        m = np.array([c.tokens for c in self.channels], dtype=np.int64)
+        return src, dst, w, m
+
+
+def _zero_token_subgraph_is_acyclic(n: int, channels: Iterable[Channel]) -> bool:
+    adj: list[list[int]] = [[] for _ in range(n)]
+    indeg = np.zeros(n, dtype=np.int64)
+    for c in channels:
+        if c.tokens == 0:
+            adj[c.src].append(c.dst)
+            indeg[c.dst] += 1
+    stack = [i for i in range(n) if indeg[i] == 0]
+    seen = 0
+    while stack:
+        u = stack.pop()
+        seen += 1
+        for v in adj[u]:
+            indeg[v] -= 1
+            if indeg[v] == 0:
+                stack.append(v)
+    return seen == n
+
+
+# ----------------------------------------------------------------------
+def sdfg_from_clusters(
+    clustered: ClusteredSNN,
+    exec_time: Optional[np.ndarray] = None,
+    *,
+    hw: Optional[HardwareConfig] = None,
+) -> SDFG:
+    """Build the application SDFG of a clustered SNN (§3, infinite resources).
+
+    Channel directions follow spike flow; channels that point "backward" in
+    layer order (created by partitioning, Fig. 6, or by recurrence) carry one
+    initial token — the dependency they encode is on the *previous* iteration,
+    which keeps RptV = [1..1] consistent and the graph live.  Every actor gets
+    a one-token self-edge (Eq. 2: t_i(k) >= t_i(k-1) + tau_i).
+    """
+    n = clustered.n_clusters
+    if exec_time is None:
+        base = hw.t_fire if hw is not None else 4.0
+        enc = hw.t_spike_encode if hw is not None else 0.01
+        # firing cost = crossbar propagation + AER encode of produced spikes
+        exec_time = base + enc * clustered.out_spikes
+    exec_time = np.asarray(exec_time, dtype=np.float64)
+
+    # topological rank of clusters: earliest layer of any member neuron
+    rank = np.full(n, np.iinfo(np.int32).max, dtype=np.int64)
+    for neuron, c in enumerate(clustered.cluster_of):
+        layer = int(clustered.snn.layer_of[neuron])
+        if layer < rank[c]:
+            rank[c] = layer
+    # tie-break by cluster index so the 0-token subgraph is provably acyclic
+    order_key = rank * (n + 1) + np.arange(n)
+
+    channels = [Channel(i, i, 1, 1.0, kind="self") for i in range(n)]
+    for (i, j), spikes in sorted(clustered.channel_spikes.items()):
+        tokens = 1 if order_key[j] <= order_key[i] else 0
+        channels.append(Channel(i, j, tokens, max(spikes, 1e-6), kind="data"))
+
+    g = SDFG(n_actors=n, exec_time=exec_time, channels=channels,
+             name=clustered.snn.name)
+    g.validate()
+    assert g.is_live(), "clustered SDFG must be deadlock-free (Alg.1 line 13)"
+    return g
+
+
+# ----------------------------------------------------------------------
+def hardware_aware_sdfg(
+    app: SDFG,
+    binding: np.ndarray,
+    hw: HardwareConfig,
+    static_orders: Optional[Sequence[Sequence[int]]] = None,
+) -> SDFG:
+    """§4.4: fold resource constraints of the platform into the graph.
+
+    Step 1 (buffers): each data channel (i→j) gets a back-edge (j→i) with
+      ``floor(buffer / rate)`` initial tokens: producing claims space,
+      consuming releases it.  Inter-tile channels also get their AER/NoC
+      latency as edge delay.
+    Step 2 (ordering): if per-tile static orders are given, add the TDMA
+      order cycle a1→a2→…→ak→a1 (one token on the wrap-around edge), which
+      serializes the tile exactly like the crossbar's atomic execution.
+    """
+    binding = np.asarray(binding, dtype=np.int64)
+    assert binding.shape == (app.n_actors,)
+    assert binding.max(initial=0) < hw.n_tiles
+
+    channels: list[Channel] = []
+    for ch in app.channels:
+        if ch.kind == "self":
+            channels.append(ch)
+            continue
+        src_t, dst_t = int(binding[ch.src]), int(binding[ch.dst])
+        delay = hw.comm_delay(ch.rate, src_t, dst_t)
+        channels.append(dataclasses.replace(ch, delay=delay))
+        # Step 1: buffer back-edge. Output buffer is claimed at firing start
+        # and released when the consumer drains it (§4.4 atomic execution).
+        buf_tokens = max(1, int(hw.tile.output_buffer // max(ch.rate, 1.0)))
+        channels.append(
+            Channel(ch.dst, ch.src, buf_tokens, ch.rate, delay=0.0, kind="buffer")
+        )
+
+    if static_orders is not None:
+        for tile, order in enumerate(static_orders):
+            order = [a for a in order if binding[a] == tile]
+            if len(order) <= 1:
+                continue
+            for a, b in zip(order, order[1:]):
+                channels.append(Channel(a, b, 0, 1.0, kind="order"))
+            channels.append(Channel(order[-1], order[0], 1, 1.0, kind="order"))
+
+    g = SDFG(
+        n_actors=app.n_actors,
+        exec_time=app.exec_time,
+        channels=channels,
+        name=f"{app.name}@{hw.n_tiles}t",
+    )
+    g.validate()
+    return g

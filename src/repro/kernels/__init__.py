@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+  maxplus_matmul  — (max,+) semiring matmul for Max-Plus MCM analysis (VPU)
+  lif_crossbar    — fused crossbar matvec (MXU) + LIF neuron update (VPU)
+  flash_attention — block-wise online-softmax attention (MXU+VPU)
+  mamba_scan      — chunked selective-state-space scan (VPU)
+
+Each kernel has a pure-jnp oracle in ``ref.py``; ``ops.py`` holds the jit'd
+public wrappers (padding, interpret-mode dispatch on CPU).
+"""
+
+from . import ops, ref
+
+__all__ = ["ops", "ref"]

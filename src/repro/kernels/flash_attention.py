@@ -1,0 +1,154 @@
+"""Block-wise online-softmax (flash) attention Pallas kernel.
+
+Used by the LM substrate for training and prefill attention (GQA and MQA via
+head grouping; optional sliding window for StarCoder2; optional causal mask).
+
+TPU mapping: the score matmul q·kᵀ and the p·v matmul hit the MXU with
+(bq, d) x (d, bkv) tiles; the online-softmax rescale runs on the VPU between
+them.  Running stats (m, l) and the output accumulator live in VMEM scratch
+across the kv grid axis, so each q block streams the whole kv sequence
+without HBM round-trips.  Block sizes default to the MXU-native 128 and all
+blocks are (8,128)-aligned.
+
+Softmax stats are stored lane-replicated (bq, 128) — the standard TPU trick
+to keep reductions register-aligned.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = float("-inf")
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
+    *, n_kv: int, bq: int, bkv: int, scale: float,
+    causal: bool, window: int,
+):
+    ik = pl.program_id(3)
+    iq = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref[...])
+        m_ref[...] = jnp.full_like(m_ref[...], NEG)
+        l_ref[...] = jnp.zeros_like(l_ref[...])
+
+    q_start = iq * bq
+    kv_start = ik * bkv
+
+    # block-level skip: strictly-future kv blocks (causal) and blocks fully
+    # left of the sliding window contribute nothing.
+    run = jnp.full((), True)
+    if causal:
+        run = jnp.logical_and(run, kv_start <= q_start + bq - 1)
+    if window > 0:
+        run = jnp.logical_and(run, kv_start + bkv - 1 >= q_start - window + 1)
+
+    @pl.when(run)
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32) * scale          # (bq, d)
+        k = k_ref[0, 0].astype(jnp.float32)                   # (bkv, d)
+        v = v_ref[0, 0].astype(jnp.float32)                   # (bkv, d)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )                                                     # (bq, bkv)
+
+        q_idx = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 0)
+        kv_idx = kv_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 1)
+        mask = jnp.ones_like(s, dtype=jnp.bool_)
+        if causal:
+            mask &= q_idx >= kv_idx
+        if window > 0:
+            mask &= (q_idx - kv_idx) < window
+        s = jnp.where(mask, s, NEG)
+
+        m_prev = m_ref[...][:, :1]                            # (bq, 1)
+        m_cur = jnp.max(s, axis=1, keepdims=True)             # (bq, 1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+
+        p = jnp.exp(s - m_safe)
+        p = jnp.where(mask, p, 0.0)                           # kill -inf rows
+        alpha = jnp.where(
+            jnp.isfinite(m_prev), jnp.exp(m_prev - m_safe), 0.0
+        )                                                     # (bq, 1)
+
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(
+            p, axis=1, keepdims=True
+        ) * jnp.ones_like(l_ref[...])
+        acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+            p, v, preferred_element_type=jnp.float32
+        )
+        m_ref[...] = m_new * jnp.ones_like(m_ref[...])
+
+    @pl.when(ik == n_kv - 1)
+    def _flush():
+        l = l_ref[...][:, :1]
+        l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "bq", "bkv", "interpret"),
+)
+def flash_attention(
+    q: jax.Array,  # (B, Hq, Sq, D)
+    k: jax.Array,  # (B, Hkv, Skv, D)
+    v: jax.Array,  # (B, Hkv, Skv, D)
+    *,
+    causal: bool = True,
+    window: int = 0,          # 0 = no sliding window
+    bq: int = 128,
+    bkv: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Flash attention with grouped KV heads. Sq, Skv must be block multiples."""
+    b, hq, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    assert hq % hkv == 0, (hq, hkv)
+    group = hq // hkv
+    assert sq % bq == 0 and skv % bkv == 0, (sq, skv, bq, bkv)
+    n_q, n_kv = sq // bq, skv // bkv
+    scale = 1.0 / math.sqrt(d)
+
+    kernel = functools.partial(
+        _flash_kernel,
+        n_kv=n_kv, bq=bq, bkv=bkv, scale=scale,
+        causal=causal, window=window,
+    )
+    grid = (b, hq, n_q, n_kv)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda ib, ih, iq, ik: (ib, ih, iq, 0)),
+            pl.BlockSpec(
+                (1, 1, bkv, d),
+                lambda ib, ih, iq, ik, g=group: (ib, ih // g, ik, 0),
+            ),
+            pl.BlockSpec(
+                (1, 1, bkv, d),
+                lambda ib, ih, iq, ik, g=group: (ib, ih // g, ik, 0),
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, bq, d), lambda ib, ih, iq, ik: (ib, ih, iq, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, hq, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, d), jnp.float32),
+            pltpu.VMEM((bq, 128), jnp.float32),
+            pltpu.VMEM((bq, 128), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,105 @@
+"""Fused crossbar accumulate + LIF neuron update Pallas kernel.
+
+TPU-native analogue of one neuromorphic tile executing a cluster (paper
+§4.3, Fig. 8): the crossbar's Kirchhoff current summation
+``I_j = sum_i s_i * w_ij`` becomes an MXU matmul over the 128x128 weight
+block (deliberately the crossbar's own granularity = the MXU's native
+systolic tile), and the neuron dynamics
+
+    v' = leak * v + I
+    spike = v' >= v_th
+    v_out = spike ? v_reset : v'
+
+run on the VPU in the same kernel invocation, so membrane state never
+round-trips to HBM between the accumulate and the update.
+
+Batched over clusters: input spikes are (B, n_in), weights (n_in, n_out),
+state (B, n_out).  BlockSpecs tile B and n_out; n_in is reduced through a
+VMEM accumulator over the minor grid axis.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _lif_kernel(
+    s_ref, w_ref, v_ref, out_spike_ref, out_v_ref, acc_ref,
+    *, n_k: int, leak: float, v_th: float, v_reset: float,
+):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref[...])
+
+    # crossbar accumulate on the MXU (fp32 accumulation)
+    acc_ref[...] += jnp.dot(
+        s_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == n_k - 1)
+    def _update():
+        v = v_ref[...].astype(jnp.float32)
+        v_new = leak * v + acc_ref[...]
+        fired = v_new >= v_th
+        out_spike_ref[...] = fired.astype(out_spike_ref.dtype)
+        out_v_ref[...] = jnp.where(fired, v_reset, v_new).astype(out_v_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("leak", "v_th", "v_reset", "bb", "bn", "bk", "interpret"),
+)
+def lif_crossbar_step(
+    spikes: jax.Array,   # (B, n_in)  0/1 activity
+    weights: jax.Array,  # (n_in, n_out)
+    v: jax.Array,        # (B, n_out) membrane state
+    *,
+    leak: float = 0.9,
+    v_th: float = 1.0,
+    v_reset: float = 0.0,
+    bb: int = 8,
+    bn: int = 128,
+    bk: int = 128,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """One fused crossbar step. Returns (out_spikes, v_next).
+
+    Shapes must be block multiples; :mod:`repro.kernels.ops` pads and
+    dispatches for arbitrary shapes.
+    """
+    b, n_in = spikes.shape
+    n_in2, n_out = weights.shape
+    assert n_in == n_in2 and v.shape == (b, n_out)
+    assert b % bb == 0 and n_out % bn == 0 and n_in % bk == 0
+    n_k = n_in // bk
+    grid = (b // bb, n_out // bn, n_k)
+
+    kernel = functools.partial(
+        _lif_kernel, n_k=n_k, leak=leak, v_th=v_th, v_reset=v_reset
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bb, bn), lambda i, j, kk: (i, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bb, bn), lambda i, j, kk: (i, j)),
+            pl.BlockSpec((bb, bn), lambda i, j, kk: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, n_out), spikes.dtype),
+            jax.ShapeDtypeStruct((b, n_out), v.dtype),
+        ],
+        scratch_shapes=[pltpu.VMEM((bb, bn), jnp.float32)],
+        interpret=interpret,
+    )(spikes, weights, v)

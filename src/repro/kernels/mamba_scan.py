@@ -1,0 +1,117 @@
+"""Chunked selective-state-space (Mamba/S6) scan Pallas kernel.
+
+Jamba's Mamba blocks need ``h_t = exp(dt_t * A) ⊙ h_{t-1} + dt_t * B_t x_t``
+with ``y_t = C_t · h_t + D ⊙ x_t`` over very long sequences.  The TPU
+adaptation is a two-phase chunked scan (Mamba-2-style reformulation, adapted
+to VMEM):
+
+  phase 1 (this kernel, h0 = 0):   per-chunk local scan, in parallel over
+      (batch, chunk, channel-block); emits local outputs and the chunk-final
+      local state.
+  combine (host, jnp):             an ``n_chunks``-step associative scan
+      propagates initial states across chunks:
+      ``H_init(c) = Decay(c-1) ⊙ H_init(c-1) + S_local(c-1)``.
+  phase 2 (this kernel, h0 = H_init): re-scan each chunk from its true
+      initial state (recompute beats materializing (L, D, N) decay tensors —
+      HBM traffic is the binding constraint, see DESIGN.md §3).
+
+The channel dimension is blocked at 128 (VREG lane width); the state dim N
+(=16 for Jamba) rides along in VMEM; the per-step recurrence is a
+``fori_loop`` over the chunk inside the kernel.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _scan_kernel(
+    x_ref,      # (1, lc, bd)
+    dt_ref,     # (1, lc, bd)
+    a_ref,      # (bd, n_state)
+    b_ref,      # (1, lc, n_state)
+    c_ref,      # (1, lc, n_state)
+    h0_ref,     # (1, 1, bd, n_state)
+    y_ref,      # (1, lc, bd)
+    hout_ref,   # (1, 1, bd, n_state)
+    *,
+    lc: int,
+):
+    x = x_ref[0].astype(jnp.float32)        # (lc, bd)
+    dt = dt_ref[0].astype(jnp.float32)      # (lc, bd)
+    a = a_ref[...].astype(jnp.float32)      # (bd, n)
+    bmat = b_ref[0].astype(jnp.float32)     # (lc, n)
+    cmat = c_ref[0].astype(jnp.float32)     # (lc, n)
+    h = h0_ref[0, 0].astype(jnp.float32)    # (bd, n)
+
+    def step(t, carry):
+        h, y = carry
+        dt_t = jax.lax.dynamic_slice_in_dim(dt, t, 1, axis=0)[0]   # (bd,)
+        x_t = jax.lax.dynamic_slice_in_dim(x, t, 1, axis=0)[0]     # (bd,)
+        b_t = jax.lax.dynamic_slice_in_dim(bmat, t, 1, axis=0)[0]  # (n,)
+        c_t = jax.lax.dynamic_slice_in_dim(cmat, t, 1, axis=0)[0]  # (n,)
+        decay = jnp.exp(dt_t[:, None] * a)                         # (bd, n)
+        h = decay * h + (dt_t * x_t)[:, None] * b_t[None, :]
+        y_t = jnp.sum(h * c_t[None, :], axis=1)                    # (bd,)
+        y = jax.lax.dynamic_update_slice_in_dim(y, y_t[None, :], t, axis=0)
+        return h, y
+
+    y0 = jnp.zeros((lc, x.shape[1]), jnp.float32)
+    h, y = jax.lax.fori_loop(0, lc, step, (h, y0))
+    y_ref[0] = y.astype(y_ref.dtype)
+    hout_ref[0, 0] = h.astype(hout_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "bd", "interpret"))
+def mamba_chunk_scan(
+    x: jax.Array,    # (B, L, D)
+    dt: jax.Array,   # (B, L, D)   post-softplus step sizes
+    a: jax.Array,    # (D, N)      negative log decays
+    b: jax.Array,    # (B, L, N)
+    c: jax.Array,    # (B, L, N)
+    h0: jax.Array,   # (B, n_chunks, D, N) initial state per chunk
+    *,
+    chunk: int = 128,
+    bd: int = 128,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Scan every chunk from its given initial state.
+
+    Returns (y, h_final) with y: (B, L, D) and h_final: (B, n_chunks, D, N)
+    — the final state of each chunk's scan.  ``ops.mamba_scan`` wires the
+    two phases + the host combine into the full sequence scan.
+    """
+    B, L, D = x.shape
+    N = a.shape[1]
+    assert L % chunk == 0 and D % bd == 0
+    n_chunks = L // chunk
+    assert h0.shape == (B, n_chunks, D, N), h0.shape
+
+    grid = (B, n_chunks, D // bd)
+    y, hout = pl.pallas_call(
+        functools.partial(_scan_kernel, lc=chunk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, bd), lambda ib, ic, idd: (ib, ic, idd)),
+            pl.BlockSpec((1, chunk, bd), lambda ib, ic, idd: (ib, ic, idd)),
+            pl.BlockSpec((bd, N), lambda ib, ic, idd: (idd, 0)),
+            pl.BlockSpec((1, chunk, N), lambda ib, ic, idd: (ib, ic, 0)),
+            pl.BlockSpec((1, chunk, N), lambda ib, ic, idd: (ib, ic, 0)),
+            pl.BlockSpec((1, 1, bd, N), lambda ib, ic, idd: (ib, ic, idd, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, bd), lambda ib, ic, idd: (ib, ic, idd)),
+            pl.BlockSpec((1, 1, bd, N), lambda ib, ic, idd: (ib, ic, idd, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, L, D), x.dtype),
+            jax.ShapeDtypeStruct((B, n_chunks, D, N), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, dt, a, b, c, h0)
+    return y, hout

@@ -1,0 +1,94 @@
+"""(max,+) semiring matmul Pallas kernel.
+
+The Max-Plus power iteration ``t_k = T (x) t_{k-1}`` (paper Eq. 4) and the
+closure computations over large clustered SDFGs reduce to matmuls in the
+(max,+) semiring:   C[i,j] = max_k (A[i,k] + B[k,j]).
+
+TPU adaptation (DESIGN.md §3): the MXU implements only the (+,*) semiring,
+so this kernel targets the VPU — blocks of A and B are staged in VMEM and
+the reduction is an 8x128-vreg ``max`` over broadcast sums.  Block shapes
+are multiples of (8, 128) so loads/stores stay register-aligned; K is the
+minor grid dimension with a VMEM accumulator initialized to -inf and flushed
+on the last K step.
+
+Neutral element is -inf: padding rows/cols with -inf keeps results exact for
+non-multiple shapes (handled in ops.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = float("-inf")
+
+
+def _maxplus_kernel(a_ref, b_ref, out_ref, acc_ref, *, n_k: int, unroll_k: int):
+    """One (bm, bn) output block; K iterated via grid dim 2."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.full_like(acc_ref[...], NEG)
+
+    a = a_ref[...]  # (bm, bk)
+    b = b_ref[...]  # (bk, bn)
+    bk = a.shape[1]
+
+    # Reduce over k in sub-chunks to bound the (bm, chunk, bn) VREG footprint.
+    def body(c, acc):
+        a_c = jax.lax.dynamic_slice_in_dim(a, c * unroll_k, unroll_k, axis=1)
+        b_c = jax.lax.dynamic_slice_in_dim(b, c * unroll_k, unroll_k, axis=0)
+        part = jnp.max(a_c[:, :, None] + b_c[None, :, :], axis=1)
+        return jnp.maximum(acc, part)
+
+    acc = jax.lax.fori_loop(0, bk // unroll_k, body, acc_ref[...])
+    acc_ref[...] = acc
+
+    @pl.when(k == n_k - 1)
+    def _flush():
+        out_ref[...] = acc_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "unroll_k", "interpret"))
+def maxplus_matmul(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 128,
+    unroll_k: int = 8,
+    interpret: bool = False,
+) -> jax.Array:
+    """C = A (x) B in (max,+); shapes must be multiples of the block shape.
+
+    Use :func:`repro.kernels.ops.maxplus_matmul` for arbitrary shapes
+    (it pads with -inf) and for the CPU/interpret dispatch.
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (
+        f"shape {(m, k, n)} not a multiple of blocks {(bm, bk, bn)}"
+    )
+    assert bk % unroll_k == 0
+    n_k = k // bk
+    grid = (m // bm, n // bn, n_k)
+
+    return pl.pallas_call(
+        functools.partial(_maxplus_kernel, n_k=n_k, unroll_k=unroll_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), a.dtype)],
+        interpret=interpret,
+    )(a, b)

@@ -1,0 +1,108 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness references).
+
+Each ``<name>_ref`` matches the corresponding kernel's public wrapper in
+:mod:`repro.kernels.ops` bit-for-bit semantics (up to fp associativity);
+tests sweep shapes/dtypes and assert allclose kernel-vs-ref.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+# ----------------------------------------------------------------------
+def maxplus_matmul_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    """C[i,j] = max_k A[i,k] + B[k,j]."""
+    return jnp.max(a[:, :, None] + b[None, :, :], axis=1)
+
+
+def maxplus_matvec_ref(a: jax.Array, x: jax.Array) -> jax.Array:
+    return jnp.max(a + x[None, :], axis=1)
+
+
+# ----------------------------------------------------------------------
+def lif_crossbar_step_ref(
+    spikes: jax.Array,
+    weights: jax.Array,
+    v: jax.Array,
+    *,
+    leak: float = 0.9,
+    v_th: float = 1.0,
+    v_reset: float = 0.0,
+) -> tuple[jax.Array, jax.Array]:
+    """Crossbar accumulate + LIF update, unfused."""
+    i_syn = jnp.dot(
+        spikes.astype(jnp.float32),
+        weights.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+    v_new = leak * v.astype(jnp.float32) + i_syn
+    fired = v_new >= v_th
+    out_v = jnp.where(fired, v_reset, v_new)
+    return fired.astype(spikes.dtype), out_v.astype(v.dtype)
+
+
+# ----------------------------------------------------------------------
+def attention_ref(
+    q: jax.Array,  # (B, Hq, Sq, D)
+    k: jax.Array,  # (B, Hkv, Skv, D)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+) -> jax.Array:
+    """Dense softmax attention with GQA head grouping + optional SWA."""
+    b, hq, sq, d = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    group = hq // hkv
+    kx = jnp.repeat(k, group, axis=1)
+    vx = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum(
+        "bhqd,bhkd->bhqk", q.astype(jnp.float32), kx.astype(jnp.float32)
+    ) / math.sqrt(d)
+    q_idx = jnp.arange(sq)[:, None]
+    kv_idx = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), dtype=bool)
+    if causal:
+        mask &= q_idx >= kv_idx
+    if window > 0:
+        mask &= (q_idx - kv_idx) < window
+    s = jnp.where(mask[None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vx.astype(jnp.float32)).astype(q.dtype)
+
+
+# ----------------------------------------------------------------------
+def mamba_scan_ref(
+    x: jax.Array,   # (B, L, D)
+    dt: jax.Array,  # (B, L, D)
+    a: jax.Array,   # (D, N)
+    b: jax.Array,   # (B, L, N)
+    c: jax.Array,   # (B, L, N)
+    h0: jax.Array | None = None,  # (B, D, N)
+) -> tuple[jax.Array, jax.Array]:
+    """Sequential S6 scan. Returns (y, h_final)."""
+    B, L, D = x.shape
+    N = a.shape[1]
+    if h0 is None:
+        h0 = jnp.zeros((B, D, N), jnp.float32)
+
+    def step(h, inp):
+        x_t, dt_t, b_t, c_t = inp  # (B,D) (B,D) (B,N) (B,N)
+        decay = jnp.exp(dt_t[..., None] * a[None])            # (B, D, N)
+        h = decay * h + (dt_t * x_t)[..., None] * b_t[:, None, :]
+        y_t = jnp.sum(h * c_t[:, None, :], axis=-1)           # (B, D)
+        return h, y_t
+
+    xs = (
+        jnp.moveaxis(x, 1, 0).astype(jnp.float32),
+        jnp.moveaxis(dt, 1, 0).astype(jnp.float32),
+        jnp.moveaxis(b, 1, 0).astype(jnp.float32),
+        jnp.moveaxis(c, 1, 0).astype(jnp.float32),
+    )
+    h, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), h

@@ -1,0 +1,3 @@
+# Launch layer: mesh construction, sharding rules, dry-run, train/serve
+# drivers.  Keep this __init__ import-free: importing repro.launch.* must
+# never touch jax device state (dryrun.py sets XLA_FLAGS first).

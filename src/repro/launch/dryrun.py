@@ -1,0 +1,395 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production meshes and extract the roofline terms.
+
+  single-pod mesh: (16, 16)    axes (data, model)         = 256 chips
+  multi-pod mesh : (2, 16, 16) axes (pod, data, model)    = 512 chips
+
+For each cell we record to benchmarks/artifacts/dryrun/<cell>.json:
+  * compiled.memory_analysis()  — per-device bytes (proves residency)
+  * compiled.cost_analysis()    — HLO FLOPs + bytes accessed
+  * collective bytes            — parsed from the optimized HLO text
+    (all-gather / all-reduce / reduce-scatter / all-to-all /
+     collective-permute operand sizes)
+  * the three roofline terms (seconds) for TPU v5e constants.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-1.5b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--opt-dtype ...]
+"""
+
+import argparse
+import json
+import pathlib
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCHS, SHAPES, get_arch, input_specs
+from repro.configs.base import decode_cache_specs
+from repro.launch import sharding as sh
+from repro.launch.mesh import HW, make_production_mesh
+from repro.launch.steps import make_prefill_step, make_serve_step, make_train_step
+from repro.models import transformer as tf
+from repro.optim import AdamWConfig, adamw_init
+
+ART = pathlib.Path(__file__).resolve().parents[3] / "benchmarks" / "artifacts" / "dryrun"
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4,
+    "u16": 2, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """'bf16[8,128,4096]' -> byte size. Tuple shapes handled by caller."""
+    m = re.match(r"([a-z0-9]+)\[([0-9,]*)\]", shape_str)
+    if not m:
+        return 0
+    dt, dims = m.groups()
+    nbytes = _DTYPE_BYTES.get(dt, 4)
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * nbytes
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum output-operand bytes of every collective op in optimized HLO."""
+    out: dict[str, float] = {k: 0.0 for k in _COLLECTIVES}
+    counts: dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        m = re.match(r"(?:ROOT )?%?[\w.\-]+ = (\(?[a-z0-9]+\[[^=]*?) ([a-z0-9\-]+)\(", s)
+        if not m:
+            continue
+        shapes_str, op = m.groups()
+        if op not in _COLLECTIVES:
+            continue
+        total = sum(_shape_bytes(x) for x in re.findall(r"[a-z0-9]+\[[0-9,]*\]", shapes_str))
+        out[op] += total
+        counts[op] += 1
+    out_named = {f"bytes_{k}": v for k, v in out.items()}
+    out_named.update({f"count_{k}": counts[k] for k in _COLLECTIVES})
+    out_named["bytes_total"] = sum(out.values())
+    return out_named
+
+
+# ----------------------------------------------------------------------
+def pick_opt_dtype(cfg) -> str:
+    """Optimizer-state dtype policy by model size (DESIGN.md §6)."""
+    n = cfg.param_count()
+    if n > 50e9:
+        return "int8"
+    if n > 5e9:
+        return "bfloat16"
+    return "float32"
+
+
+def model_flops(cfg, shape_info) -> float:
+    """6*N_active*D for train (fwd+bwd), 2*N_active*D for inference."""
+    n_active = cfg.active_param_count()
+    if shape_info["kind"] == "train":
+        tokens = shape_info["seq_len"] * shape_info["global_batch"]
+        return 6.0 * n_active * tokens
+    if shape_info["kind"] == "prefill":
+        tokens = shape_info["seq_len"] * shape_info["global_batch"]
+        return 2.0 * n_active * tokens
+    tokens = shape_info["global_batch"]  # one token per sequence
+    return 2.0 * n_active * tokens
+
+
+# ----------------------------------------------------------------------
+def lower_cell(arch: str, shape: str, *, multi_pod: bool, opt_dtype=None,
+               unroll: bool = False, repeats_override=None, skip_probes=False):
+    """Lower + compile one (arch, shape, mesh) cell; return the record.
+
+    Cost accounting: XLA counts a while-loop (scan) body ONCE, so the main
+    scan-variant artifact under-reports FLOPs/collectives by the trip
+    counts.  We therefore compile small UNROLLED probes — all stack repeats
+    at 1, then each stack at 2 — and solve the per-stack body costs by
+    differencing; the recorded roofline numbers are
+    ``probe1 + sum_k (repeat_k - 1) * body_k`` (trip-count exact).
+    ``unroll=True`` instead lowers the whole model unrolled (slow; used to
+    cross-validate the probe method on the hillclimb cells).
+    """
+    import dataclasses as _dc
+
+    cfg = get_arch(arch)
+    if repeats_override is not None:
+        cfg = _dc.replace(
+            cfg,
+            layer_unroll=True,
+            stacks=tuple(
+                (int(r), specs)
+                for r, (_, specs) in zip(repeats_override, cfg.stacks)
+            ),
+        )
+    elif unroll:
+        cfg = _dc.replace(cfg, layer_unroll=True)
+    info = SHAPES[shape]
+    if shape == "long_500k" and not cfg.subquadratic:
+        return {"arch": arch, "shape": shape, "skipped": "quadratic-attention"}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = int(np.prod(list(mesh.shape.values())))
+    record = {
+        "arch": arch, "shape": shape,
+        "mesh": "x".join(str(mesh.shape[a]) for a in mesh.axis_names),
+        "chips": n_chips,
+    }
+    t0 = time.time()
+
+    params_abs = tf.init_abstract(cfg)
+    params_sh = sh.params_shardings(params_abs, mesh)
+    specs, _ = input_specs(cfg, shape)
+
+    with sh.use_mesh(mesh):
+        if info["kind"] == "train":
+            opt = AdamWConfig(state_dtype=opt_dtype or pick_opt_dtype(cfg))
+            opt_abs = jax.eval_shape(lambda p: adamw_init(p, opt), params_abs)
+            opt_sh = sh.opt_state_shardings(opt_abs, params_abs, mesh)
+            batch_sh = sh.batch_shardings(specs, mesh)
+            # microbatch big models so the activation stash fits residency;
+            # probes lower with accum=1 (the accum scan would single-count
+            # the whole fwd/bwd in cost_analysis — same trip-count caveat)
+            accum = (
+                1
+                if repeats_override is not None
+                else (16 if cfg.param_count() > 30e9 else 1)
+            )
+            record["grad_accum"] = accum
+            step = make_train_step(cfg, opt, accum=accum)
+            jitted = jax.jit(
+                step,
+                in_shardings=(params_sh, opt_sh, batch_sh),
+                out_shardings=(params_sh, opt_sh, None),
+                donate_argnums=(0, 1),
+            )
+            lowered = jitted.lower(params_abs, opt_abs, specs)
+        elif info["kind"] == "prefill":
+            batch_sh = sh.batch_shardings(specs, mesh)
+            step = make_prefill_step(cfg)
+            jitted = jax.jit(step, in_shardings=(params_sh, batch_sh))
+            lowered = jitted.lower(params_abs, specs)
+        else:  # decode
+            # serving: weight-stationary params (no FSDP axis) + whole-
+            # expert inference EP — §Perf iteration 6
+            cfg = _dc.replace(cfg, inference_ep=True)
+            params_sh = sh.params_shardings(params_abs, mesh, inference=True)
+            cache_abs = decode_cache_specs(cfg, shape)
+            cache_sh = sh.cache_shardings(cache_abs, mesh)
+            tok_abs = specs["tokens"]
+            tok_sh = sh.batch_shardings({"t": tok_abs}, mesh)["t"]
+            len_abs = specs["cache_len"]
+            step = make_serve_step(cfg)
+            jitted = jax.jit(
+                step,
+                in_shardings=(params_sh, cache_sh, tok_sh, None),
+                out_shardings=(None, cache_sh),
+                donate_argnums=(1,),
+            )
+            lowered = jitted.lower(params_abs, cache_abs, tok_abs, len_abs)
+
+        record["lower_s"] = round(time.time() - t0, 1)
+        t1 = time.time()
+        compiled = lowered.compile()
+        record["compile_s"] = round(time.time() - t1, 1)
+
+        mem = compiled.memory_analysis()
+        record["memory"] = {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+        }
+        cost = compiled.cost_analysis()
+        record["cost"] = {
+            "flops": cost.get("flops", 0.0),
+            "bytes_accessed": cost.get("bytes accessed", 0.0),
+        }
+        hlo = compiled.as_text()
+        record["collectives"] = collective_bytes(hlo)
+
+    # roofline terms (seconds) — single-chip constants x chip count
+    flops = record["cost"]["flops"]
+    # cost_analysis flops on the CPU backend are per-partition post-SPMD;
+    # normalize to per-chip if they look global (heuristic recorded below).
+    record["roofline"] = roofline_terms(record, cfg, info, n_chips)
+    record["model_flops"] = model_flops(cfg, info)
+    record["params_total"] = cfg.param_count()
+    record["params_active"] = cfg.active_param_count()
+    return record
+
+
+def roofline_terms(record, cfg, info, n_chips) -> dict:
+    flops = float(record["cost"]["flops"])
+    bytes_acc = float(record["cost"]["bytes_accessed"])
+    coll = float(record["collectives"]["bytes_total"])
+    # cost_analysis reports the per-device (post-SPMD) program: flops and
+    # bytes are per chip; collective bytes from HLO text are per chip too.
+    t_compute = flops / HW["peak_flops_bf16"]
+    t_memory = bytes_acc / HW["hbm_bw"]
+    t_collective = coll / HW["ici_bw"]
+    dominant = max(
+        ("compute", t_compute), ("memory", t_memory), ("collective", t_collective),
+        key=lambda kv: kv[1],
+    )[0]
+    return {
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_collective,
+        "dominant": dominant,
+    }
+
+
+# ----------------------------------------------------------------------
+def _probe_costs(arch, shape, *, multi_pod, opt_dtype):
+    """Trip-count-exact costs via unrolled probe differencing."""
+    cfg = get_arch(arch)
+    repeats = [r for r, _ in cfg.stacks]
+    base = lower_cell(arch, shape, multi_pod=multi_pod, opt_dtype=opt_dtype,
+                      repeats_override=[1] * len(repeats))
+    if "skipped" in base:
+        return None
+    flops = float(base["cost"]["flops"])
+    bytes_acc = float(base["cost"]["bytes_accessed"])
+    coll = dict(base["collectives"])
+    probes = {"probe1": base["cost"] | {"coll": base["collectives"]["bytes_total"]}}
+    for k, r_k in enumerate(repeats):
+        if r_k == 1:
+            continue
+        reps = [1] * len(repeats)
+        reps[k] = 2
+        pk = lower_cell(arch, shape, multi_pod=multi_pod, opt_dtype=opt_dtype,
+                        repeats_override=reps)
+        # clamp at 0: XLA may fuse the 2-layer probe differently than the
+        # 1-layer one; a small negative delta is compile noise, not physics
+        body_flops = max(
+            0.0, float(pk["cost"]["flops"]) - float(base["cost"]["flops"])
+        )
+        body_bytes = max(
+            0.0,
+            float(pk["cost"]["bytes_accessed"])
+            - float(base["cost"]["bytes_accessed"]),
+        )
+        flops += (r_k - 1) * body_flops
+        bytes_acc += (r_k - 1) * body_bytes
+        for key in coll:
+            if key.startswith("bytes_") or key.startswith("count_"):
+                delta = max(
+                    0.0, pk["collectives"][key] - base["collectives"][key]
+                )
+                coll[key] += (r_k - 1) * delta
+        probes[f"probe_stack{k}"] = pk["cost"] | {
+            "coll": pk["collectives"]["bytes_total"]
+        }
+    coll["bytes_total"] = sum(
+        v for k, v in coll.items() if k.startswith("bytes_") and k != "bytes_total"
+    )
+    return {
+        "flops": flops,
+        "bytes_accessed": bytes_acc,
+        "collectives": coll,
+        "probes": probes,
+    }
+
+
+def run_cell(arch, shape, *, multi_pod, opt_dtype=None, tag="", unroll=False,
+             probes=True):
+    name = f"{arch}__{shape}__{'512' if multi_pod else '256'}"
+    if unroll:
+        name += "__unroll"
+    name += tag
+    ART.mkdir(parents=True, exist_ok=True)
+    path = ART / f"{name}.json"
+    try:
+        # decode cells: per-layer costs are small vs the embed/logits base,
+        # so probe differencing is noise-dominated — lower fully UNROLLED
+        # instead (decode graphs are small; compile stays cheap).
+        if SHAPES[shape]["kind"] == "decode" and not unroll:
+            unroll = True
+        rec = lower_cell(arch, shape, multi_pod=multi_pod, opt_dtype=opt_dtype,
+                         unroll=unroll)
+        rec["unroll"] = unroll
+        if probes and not unroll and "skipped" not in rec:
+            corrected = _probe_costs(arch, shape, multi_pod=multi_pod,
+                                     opt_dtype=opt_dtype)
+            if corrected is not None:
+                rec["cost_corrected"] = {
+                    "flops": corrected["flops"],
+                    "bytes_accessed": corrected["bytes_accessed"],
+                }
+                rec["collectives_corrected"] = corrected["collectives"]
+                rec["probes"] = corrected["probes"]
+                cfg = get_arch(arch)
+                info = SHAPES[shape]
+                rec["roofline"] = roofline_terms(
+                    {
+                        "cost": rec["cost_corrected"],
+                        "collectives": rec["collectives_corrected"],
+                    },
+                    cfg, info, rec["chips"],
+                )
+    except Exception as e:  # record failures — they are bugs to fix
+        rec = {
+            "arch": arch, "shape": shape, "multi_pod": multi_pod,
+            "unroll": unroll,
+            "error": f"{type(e).__name__}: {e}",
+            "traceback": traceback.format_exc()[-4000:],
+        }
+    path.write_text(json.dumps(rec, indent=2, default=float))
+    status = rec.get("error", rec.get("skipped", "ok"))
+    print(f"[dryrun] {name}: {status}", flush=True)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--opt-dtype", default=None)
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--unroll", action="store_true",
+                    help="lower stacks unrolled (cost-exact roofline variant)")
+    args = ap.parse_args()
+
+    cells = []
+    archs = list(ARCHS) if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                cells.append((arch, shape, mp))
+
+    ok = 0
+    for arch, shape, mp in cells:
+        # probes (roofline correction) only on the single-pod mesh: the
+        # multi-pod pass proves the pod axis shards (per assignment, the
+        # roofline table is single-pod).
+        rec = run_cell(arch, shape, multi_pod=mp, opt_dtype=args.opt_dtype,
+                       tag=args.tag, unroll=args.unroll, probes=not mp)
+        if "error" not in rec:
+            ok += 1
+    print(f"[dryrun] {ok}/{len(cells)} cells OK")
+
+
+if __name__ == "__main__":
+    main()

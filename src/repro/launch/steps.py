@@ -1,0 +1,105 @@
+"""jit-able train / serve steps shared by dryrun.py, train.py and serve.py."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import transformer as tf
+from repro.optim import AdamWConfig, adamw_update, cosine_schedule
+
+
+def make_train_step(cfg: ArchConfig, opt: AdamWConfig, *, accum: int = 1,
+                    accum_dtype=jnp.bfloat16, compress_grads: bool = False):
+    """(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    ``accum`` > 1 splits the global batch into that many microbatches and
+    accumulates gradients under a lax.scan — the per-layer activation
+    stash (the dominant residency term for the 100B+ cells, see
+    EXPERIMENTS.md §Dry-run) shrinks by the same factor.
+
+    ``compress_grads`` applies int8 error-feedback compression to the
+    gradients (the payload a cross-pod DP all-reduce would carry; the EF
+    residual rides in the optimizer state pytree as ``ef``).
+    """
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(tf.loss_fn)(params, batch, cfg)
+
+    def train_step(params, opt_state, batch):
+        if accum == 1:
+            loss, grads = grads_of(params, batch)
+        else:
+            micro = jax.tree.map(
+                lambda t: t.reshape(accum, t.shape[0] // accum, *t.shape[1:]),
+                batch,
+            )
+
+            def body(acc, mb):
+                loss_sum, gsum = acc
+                loss, g = grads_of(params, mb)
+                gsum = jax.tree.map(
+                    lambda a, b: a + b.astype(accum_dtype), gsum, g
+                )
+                return (loss_sum + loss, gsum), ()
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, accum_dtype), params
+            )
+            (loss, grads), _ = jax.lax.scan(body, (0.0, zeros), micro)
+            loss = loss / accum
+            grads = jax.tree.map(lambda g: g / accum, grads)
+        if compress_grads:
+            from repro.optim import decompress_int8, ef_compress_gradients
+
+            comp, ef = ef_compress_gradients(
+                grads, opt_state.get("ef"), block=256
+            )
+            grads = jax.tree.map(
+                lambda pair, g: decompress_int8(*pair, g.shape),
+                comp, grads,
+                is_leaf=lambda x: isinstance(x, tuple),
+            )
+            opt_state = dict(opt_state, ef=ef)
+        lr_scale = cosine_schedule(opt_state["step"])
+        ef_state = opt_state.get("ef")
+        params, opt_state = adamw_update(
+            params, grads, {k: v for k, v in opt_state.items() if k != "ef"},
+            opt, lr_scale,
+        )
+        if ef_state is not None:
+            opt_state = dict(opt_state, ef=ef_state)
+        gnorm = jnp.sqrt(
+            sum(
+                jnp.sum(jnp.square(g.astype(jnp.float32)))
+                for g in jax.tree.leaves(grads)
+            )
+        )
+        return params, opt_state, {"loss": loss, "grad_norm": gnorm}
+
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig):
+    """(params, batch) -> logits for the full prompt (no cache write-back:
+    the prefill cell measures the prompt-processing compute)."""
+
+    def prefill_step(params, batch):
+        logits, _ = tf.forward(params, batch, cfg)
+        return logits
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ArchConfig):
+    """One-token decode against a seq_len cache: (params, cache, tokens,
+    cache_len) -> (logits, new_cache)."""
+
+    def serve_step(params, cache, tokens, cache_len):
+        logits, cache = tf.decode_step(params, tokens, cache, cache_len, cfg)
+        return logits, cache
+
+    return serve_step

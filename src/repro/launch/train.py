@@ -1,0 +1,128 @@
+"""End-to-end training driver.
+
+On a real TPU fleet this runs the full config over the production mesh; on
+the CPU container it drives a reduced config (``--smoke``) for a few hundred
+steps — the e2e example required by the assignment.
+
+Features: deterministic shardable data, AdamW (+schedule, clip), checkpoint/
+restart (resume is bit-exact via the (seed, step) data contract), optional
+int8 error-feedback gradient compression across the data/pod axes, elastic
+re-mesh hooks.
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2-1.5b --smoke \
+      --steps 200 --ckpt-dir /tmp/ckpt
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import get_arch, reduced
+from repro.data import DataConfig, TokenStream
+from repro.launch import sharding as sh
+from repro.launch.mesh import make_local_mesh, make_production_mesh
+from repro.launch.steps import make_train_step
+from repro.models import transformer as tf
+from repro.optim import AdamWConfig, adamw_init
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-1.5b")
+    ap.add_argument("--smoke", action="store_true", help="reduced config (CPU)")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--seq-len", type=int, default=256)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--opt-dtype", default="float32")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument(
+        "--compress-grads", action="store_true",
+        help="int8 error-feedback gradient compression before the update "
+             "(the cross-pod DP all-reduce payload; 4x DCN traffic cut)",
+    )
+    args = ap.parse_args(argv)
+
+    cfg = get_arch(args.arch)
+    if args.smoke:
+        cfg = reduced(cfg)
+    n_dev = len(jax.devices())
+    mesh = (
+        make_local_mesh()
+        if n_dev == 1
+        else make_production_mesh(multi_pod=args.multi_pod)
+    )
+
+    data = TokenStream(
+        DataConfig(vocab=cfg.vocab, seq_len=args.seq_len,
+                   global_batch=args.batch)
+    )
+    opt = AdamWConfig(lr=1e-3, state_dtype=args.opt_dtype)
+    step_fn = make_train_step(
+        cfg, opt, accum=args.accum, compress_grads=args.compress_grads
+    )
+
+    key = jax.random.PRNGKey(0)
+    with sh.use_mesh(mesh):
+        params = tf.init_params(cfg, key, dtype=jnp.float32)
+        opt_state = adamw_init(params, opt)
+        if args.compress_grads:  # keep the state tree jit-stable from step 0
+            opt_state["ef"] = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+        params_sh = sh.params_shardings(params, mesh)
+        opt_sh = sh.opt_state_shardings(
+            jax.eval_shape(lambda: opt_state), params, mesh
+        )
+        jitted = jax.jit(
+            step_fn,
+            in_shardings=(params_sh, opt_sh, None),
+            out_shardings=(params_sh, opt_sh, None),
+            donate_argnums=(0, 1),
+        )
+
+        start_step = 0
+        ckpt = None
+        if args.ckpt_dir:
+            ckpt = CheckpointManager(args.ckpt_dir, every=args.ckpt_every)
+            restored = ckpt.restore_latest((params, opt_state))
+            if restored[0] is not None:
+                start_step, (params, opt_state), _ = restored
+                print(f"[train] resumed from step {start_step}")
+
+        losses = []
+        t0 = time.time()
+        for step in range(start_step, args.steps):
+            batch = jax.tree.map(jnp.asarray, data.batch(step))
+            params, opt_state, metrics = jitted(params, opt_state, batch)
+            losses.append(float(metrics["loss"]))
+            if step % args.log_every == 0 or step == args.steps - 1:
+                dt = time.time() - t0
+                tok_s = (step - start_step + 1) * args.batch * args.seq_len / dt
+                print(
+                    f"[train] step={step} loss={losses[-1]:.4f} "
+                    f"gnorm={float(metrics['grad_norm']):.3f} tok/s={tok_s:.0f}",
+                    flush=True,
+                )
+            if ckpt:
+                ckpt.maybe_save(step + 1, (params, opt_state),
+                                extra={"data_step": step + 1})
+
+        first = np.mean(losses[: max(3, len(losses) // 10)])
+        last = np.mean(losses[-max(3, len(losses) // 10):])
+        print(f"[train] loss {first:.4f} -> {last:.4f} "
+              f"({'improved' if last < first else 'NOT improved'})")
+        return losses
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,276 @@
+"""Attention variants for the assigned architectures.
+
+* GQA (grouped-query) with RoPE, optional QKV bias (Qwen), optional sliding
+  window (StarCoder2).  Uses the Pallas flash kernel on TPU; a fused-mask
+  jnp path otherwise (identical math, used for smoke tests and the CPU-host
+  dry-run lowering).
+* MLA (multi-head latent attention, DeepSeek-V2/V3): low-rank compressed KV
+  with decoupled RoPE keys; decode uses the absorbed form against the
+  compressed cache (this is exactly the paper-architecture's KV saving).
+
+KV caches are fixed-capacity ring-free buffers: (B, Hkv, S_max, D) plus an
+explicit length; ``decode`` writes at position ``len`` and masks by index.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .blocks import apply_rope, init_linear
+
+
+# ======================================================================
+# dense reference attention (masked), shared by GQA paths
+# ======================================================================
+_SDPA_CHUNK = 2048
+
+
+def _sdpa_block(q, k, v, *, causal, window, q_offset, kv_len, scale):
+    b, h, sq, d = q.shape
+    skv = k.shape[2]
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32))
+    s = s * scale
+    q_idx = q_offset + jnp.arange(sq)[:, None]
+    kv_idx = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= q_idx >= kv_idx
+    if window and window > 0:
+        mask &= (q_idx - kv_idx) < window
+    if kv_len is not None:
+        mask &= kv_idx < kv_len
+    s = jnp.where(mask[None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)  # fully-masked rows
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def _sdpa(q, k, v, *, causal, window, q_offset=0, kv_len=None):
+    """q: (B,H,Sq,D) k,v: (B,H,Skv,D). fp32 softmax.
+
+    Long queries are processed in python-unrolled q-chunks: the (Sq, Skv)
+    score tensor at 32k prefill is tens of GB per device otherwise.  Chunks
+    are unrolled (not lax.map) so cost_analysis stays trip-count-exact; on
+    TPU the Pallas flash kernel replaces this path entirely.
+    """
+    b, h, sq, d = q.shape
+    scale = 1.0 / math.sqrt(d)
+    if sq <= _SDPA_CHUNK:
+        return _sdpa_block(q, k, v, causal=causal, window=window,
+                           q_offset=q_offset, kv_len=kv_len, scale=scale)
+    outs = []
+    for start in range(0, sq, _SDPA_CHUNK):
+        stop = min(start + _SDPA_CHUNK, sq)
+        outs.append(
+            _sdpa_block(
+                q[:, :, start:stop], k, v, causal=causal, window=window,
+                q_offset=q_offset + start, kv_len=kv_len, scale=scale,
+            )
+        )
+    return jnp.concatenate(outs, axis=2)
+
+
+def _grouped(q, k, v, **kw):
+    """Expand grouped KV heads and run SDPA (or flash kernel on TPU)."""
+    hq, hkv = q.shape[1], k.shape[1]
+    if jax.default_backend() == "tpu" and kw.get("kv_len") is None:
+        from repro.kernels import ops as kops
+
+        return kops.flash_attention(
+            q, k, v, causal=kw.get("causal", True), window=kw.get("window", 0) or 0
+        )
+    if hq != hkv:
+        group = hq // hkv
+        k = jnp.repeat(k, group, axis=1)
+        v = jnp.repeat(v, group, axis=1)
+    return _sdpa(q, k, v, causal=kw.get("causal", True),
+                 window=kw.get("window", 0), q_offset=kw.get("q_offset", 0),
+                 kv_len=kw.get("kv_len"))
+
+
+# ======================================================================
+# GQA
+# ======================================================================
+def init_gqa(key, cfg, *, stack=(), dtype=jnp.float32):
+    d, hq, hkv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": init_linear(ks[0], d, hq * dh, stack=stack, dtype=dtype),
+        "wk": init_linear(ks[1], d, hkv * dh, stack=stack, dtype=dtype),
+        "wv": init_linear(ks[2], d, hkv * dh, stack=stack, dtype=dtype),
+        "wo": init_linear(ks[3], hq * dh, d, stack=stack, dtype=dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((*stack, hq * dh), dtype)
+        p["bk"] = jnp.zeros((*stack, hkv * dh), dtype)
+        p["bv"] = jnp.zeros((*stack, hkv * dh), dtype)
+    return p
+
+
+def gqa_forward(p, x, cfg, *, positions=None, window=None):
+    """Training / prefill self-attention. x: (B, S, D)."""
+    b, s, d = x.shape
+    hq, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    if positions is None:
+        positions = jnp.arange(s)[None, :]
+    q = (x @ p["wq"] + p.get("bq", 0.0)).reshape(b, s, hq, dh).transpose(0, 2, 1, 3)
+    k = (x @ p["wk"] + p.get("bk", 0.0)).reshape(b, s, hkv, dh).transpose(0, 2, 1, 3)
+    v = (x @ p["wv"] + p.get("bv", 0.0)).reshape(b, s, hkv, dh).transpose(0, 2, 1, 3)
+    q = apply_rope(q, positions[:, None, :], theta=cfg.rope_theta)
+    k = apply_rope(k, positions[:, None, :], theta=cfg.rope_theta)
+    w = window if window is not None else cfg.window
+    o = _grouped(q, k, v, causal=True, window=w)
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, hq * dh)
+    return o @ p["wo"]
+
+
+def gqa_init_cache(cfg, batch, max_len, dtype=jnp.bfloat16):
+    hkv, dh = cfg.n_kv_heads, cfg.head_dim
+    cap = min(max_len, cfg.window) if cfg.window else max_len
+    return {
+        "k": jnp.zeros((batch, hkv, cap, dh), dtype),
+        "v": jnp.zeros((batch, hkv, cap, dh), dtype),
+    }
+
+
+def gqa_decode(p, x, cache, length, cfg):
+    """One-token decode. x: (B, 1, D); length: current cache fill (scalar).
+
+    With a sliding window the cache is a rotating buffer of size ``window``
+    (StarCoder2's long_500k path: O(window) memory at 500k context).
+    """
+    b, _, d = x.shape
+    hq, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    pos = jnp.full((b, 1), length, dtype=jnp.int32)
+    q = (x @ p["wq"] + p.get("bq", 0.0)).reshape(b, 1, hq, dh).transpose(0, 2, 1, 3)
+    k = (x @ p["wk"] + p.get("bk", 0.0)).reshape(b, 1, hkv, dh).transpose(0, 2, 1, 3)
+    v = (x @ p["wv"] + p.get("bv", 0.0)).reshape(b, 1, hkv, dh).transpose(0, 2, 1, 3)
+    q = apply_rope(q, pos[:, None, :], theta=cfg.rope_theta)
+    k = apply_rope(k, pos[:, None, :], theta=cfg.rope_theta)
+
+    cap = cache["k"].shape[2]
+    slot = jnp.mod(length, cap) if cfg.window else jnp.minimum(length, cap - 1)
+    ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                      (0, 0, slot, 0))
+    cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                      (0, 0, slot, 0))
+    kv_len = jnp.minimum(length + 1, cap)
+    # grouped-head decode WITHOUT repeating the KV cache (a x(group) copy of
+    # a 32k cache is GBs of pure waste): q reshaped to (B, Hkv, G, D) and
+    # contracted directly against the shared KV heads.
+    g = hq // hkv
+    qg = q[:, :, 0].reshape(b, hkv, g, dh).astype(jnp.float32)
+    s = jnp.einsum("bhgd,bhsd->bhgs", qg, ck.astype(jnp.float32))
+    s = s / math.sqrt(dh)
+    kv_idx = jnp.arange(cap)[None, None, None, :]
+    s = jnp.where(kv_idx < kv_len, s, -jnp.inf)
+    prob = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgs,bhsd->bhgd", prob, cv.astype(jnp.float32))
+    o = o.astype(x.dtype).reshape(b, 1, hq * dh)
+    return o @ p["wo"], {"k": ck, "v": cv}
+
+
+# ======================================================================
+# MLA (DeepSeek-V3)
+# ======================================================================
+def init_mla(key, cfg, *, stack=(), dtype=jnp.float32):
+    d, h = cfg.d_model, cfg.n_heads
+    rq, rkv = cfg.mla_q_rank, cfg.mla_kv_rank
+    dn, dr, dv = cfg.mla_nope_dim, cfg.mla_rope_dim, cfg.mla_v_dim
+    ks = jax.random.split(key, 7)
+    return {
+        "wq_a": init_linear(ks[0], d, rq, stack=stack, dtype=dtype),
+        "wq_b": init_linear(ks[1], rq, h * (dn + dr), stack=stack, dtype=dtype),
+        "wkv_a": init_linear(ks[2], d, rkv + dr, stack=stack, dtype=dtype),
+        "wk_b": init_linear(ks[3], rkv, h * dn, stack=stack, dtype=dtype),
+        "wv_b": init_linear(ks[4], rkv, h * dv, stack=stack, dtype=dtype),
+        "wo": init_linear(ks[5], h * dv, d, stack=stack, dtype=dtype),
+    }
+
+
+def mla_forward(p, x, cfg, *, positions=None):
+    """Training/prefill MLA (decompressed form)."""
+    b, s, d = x.shape
+    h = cfg.n_heads
+    dn, dr, dv = cfg.mla_nope_dim, cfg.mla_rope_dim, cfg.mla_v_dim
+    rkv = cfg.mla_kv_rank
+    if positions is None:
+        positions = jnp.arange(s)[None, :]
+
+    q = (x @ p["wq_a"]) @ p["wq_b"]
+    q = q.reshape(b, s, h, dn + dr).transpose(0, 2, 1, 3)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions[:, None, :], theta=cfg.rope_theta)
+
+    kv = x @ p["wkv_a"]                       # (B, S, rkv + dr)
+    c_kv, k_rope = kv[..., :rkv], kv[..., rkv:]
+    k_rope = apply_rope(
+        k_rope[:, None], positions[:, None, :], theta=cfg.rope_theta
+    )                                          # (B, 1, S, dr) shared head
+    k_nope = (c_kv @ p["wk_b"]).reshape(b, s, h, dn).transpose(0, 2, 1, 3)
+    v = (c_kv @ p["wv_b"]).reshape(b, s, h, dv).transpose(0, 2, 1, 3)
+
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k_full = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope, (b, h, s, dr))], axis=-1
+    )
+    o = _sdpa(q_full, k_full, v, causal=True, window=0)
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, h * dv)
+    return o @ p["wo"]
+
+
+def mla_init_cache(cfg, batch, max_len, dtype=jnp.bfloat16):
+    """Compressed cache: latent c_kv + shared rope key — 576 dims/token."""
+    return {
+        "c_kv": jnp.zeros((batch, max_len, cfg.mla_kv_rank), dtype),
+        "k_rope": jnp.zeros((batch, max_len, cfg.mla_rope_dim), dtype),
+    }
+
+
+def mla_decode(p, x, cache, length, cfg):
+    """Absorbed-form decode against the compressed cache."""
+    b, _, d = x.shape
+    h = cfg.n_heads
+    dn, dr, dv = cfg.mla_nope_dim, cfg.mla_rope_dim, cfg.mla_v_dim
+    rkv = cfg.mla_kv_rank
+    pos = jnp.full((b, 1), length, dtype=jnp.int32)
+
+    q = (x @ p["wq_a"]) @ p["wq_b"]
+    q = q.reshape(b, 1, h, dn + dr).transpose(0, 2, 1, 3)      # (B,h,1,dn+dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, pos[:, None, :], theta=cfg.rope_theta)
+
+    kv = x @ p["wkv_a"]
+    c_new, kr_new = kv[..., :rkv], kv[..., rkv:]
+    kr_new = apply_rope(kr_new[:, None], pos[:, None, :], theta=cfg.rope_theta)[
+        :, 0
+    ]
+    c_kv = jax.lax.dynamic_update_slice(
+        cache["c_kv"], c_new.astype(cache["c_kv"].dtype), (0, length, 0)
+    )
+    k_rope = jax.lax.dynamic_update_slice(
+        cache["k_rope"], kr_new.astype(cache["k_rope"].dtype), (0, length, 0)
+    )
+
+    # absorbed scores: q_nope^T (W_kb c) = (q_nope W_kb^T) c
+    wk = p["wk_b"].reshape(rkv, h, dn)
+    q_lat = jnp.einsum("bhod,rhd->bhor", q_nope.astype(jnp.float32),
+                       wk.astype(jnp.float32))               # (B,h,1,rkv)
+    s_lat = jnp.einsum("bhor,bsr->bhos", q_lat,
+                       c_kv.astype(jnp.float32))             # (B,h,1,S)
+    s_rope = jnp.einsum("bhod,bsd->bhos", q_rope.astype(jnp.float32),
+                        k_rope.astype(jnp.float32))
+    scale = 1.0 / math.sqrt(dn + dr)
+    s_all = (s_lat + s_rope) * scale
+    kv_idx = jnp.arange(c_kv.shape[1])[None, None, None, :]
+    s_all = jnp.where(kv_idx <= length, s_all, -jnp.inf)
+    prob = jax.nn.softmax(s_all, axis=-1)                    # (B,h,1,S)
+    ctx_lat = jnp.einsum("bhos,bsr->bhor", prob, c_kv.astype(jnp.float32))
+    wv = p["wv_b"].reshape(rkv, h, dv)
+    o = jnp.einsum("bhor,rhd->bhod", ctx_lat, wv.astype(jnp.float32))
+    o = o.astype(x.dtype).transpose(0, 2, 1, 3).reshape(b, 1, h * dv)
+    return o @ p["wo"], {"c_kv": c_kv, "k_rope": k_rope}

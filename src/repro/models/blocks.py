@@ -1,0 +1,112 @@
+"""Shared building blocks for the LM substrate.
+
+Parameters are plain pytrees (nested dicts of jnp arrays) — no framework
+dependency.  Initializers take an explicit PRNG key; every block is a pure
+function ``f(params, x, ...) -> y`` so pjit/scan/remat compose freely.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def truncated_normal(key, shape, scale, dtype=jnp.float32):
+    # python-float scale: a strong numpy scalar would promote bf16 -> f32
+    return float(scale) * jax.random.truncated_normal(key, -2.0, 2.0, shape, dtype)
+
+
+def init_linear(key, d_in, d_out, *, stack=(), dtype=jnp.float32, scale=None):
+    scale = scale if scale is not None else 1.0 / np.sqrt(max(d_in, 1))
+    return truncated_normal(key, (*stack, d_in, d_out), scale, dtype)
+
+
+# ----------------------------------------------------------------------
+def rms_norm(w: jax.Array, x: jax.Array, *, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * w.astype(jnp.float32)).astype(dtype)
+
+
+def layer_norm(w: jax.Array, b: jax.Array, x: jax.Array, *, eps: float = 1e-5):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * w.astype(jnp.float32) + b.astype(jnp.float32)).astype(dtype)
+
+
+# ----------------------------------------------------------------------
+def swiglu_ffn(p: dict, x: jax.Array) -> jax.Array:
+    """LLaMA-style gated FFN: down(silu(gate(x)) * up(x))."""
+    h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+    return h @ p["w_down"]
+
+
+def init_swiglu(key, d_model, d_ff, *, stack=(), dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": init_linear(k1, d_model, d_ff, stack=stack, dtype=dtype),
+        "w_up": init_linear(k2, d_model, d_ff, stack=stack, dtype=dtype),
+        "w_down": init_linear(k3, d_ff, d_model, stack=stack, dtype=dtype),
+    }
+
+
+def gelu_ffn(p: dict, x: jax.Array) -> jax.Array:
+    """Plain 2-layer GELU FFN (StarCoder2, Phi-3 style)."""
+    return jax.nn.gelu(x @ p["w_up"] + p.get("b_up", 0.0)) @ p["w_down"] + p.get(
+        "b_down", 0.0
+    )
+
+
+def init_gelu_ffn(key, d_model, d_ff, *, stack=(), bias=True, dtype=jnp.float32):
+    k1, k2 = jax.random.split(key)
+    p = {
+        "w_up": init_linear(k1, d_model, d_ff, stack=stack, dtype=dtype),
+        "w_down": init_linear(k2, d_ff, d_model, stack=stack, dtype=dtype),
+    }
+    if bias:
+        p["b_up"] = jnp.zeros((*stack, d_ff), dtype)
+        p["b_down"] = jnp.zeros((*stack, d_model), dtype)
+    return p
+
+
+# ----------------------------------------------------------------------
+def rope_frequencies(d_head: int, *, theta: float = 10_000.0) -> jax.Array:
+    return 1.0 / (
+        theta ** (jnp.arange(0, d_head, 2, dtype=jnp.float32) / d_head)
+    )
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, *, theta: float = 10_000.0):
+    """x: (..., S, D_head); positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    freqs = rope_frequencies(d, theta=theta)                  # (d/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, d/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = x[..., 0::2], x[..., 1::2]
+    y1 = x1 * cos - x2 * sin
+    y2 = x1 * sin + x2 * cos
+    out = jnp.stack([y1, y2], axis=-1).reshape(x.shape)
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------------
+def cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Mean token cross-entropy in fp32.
+
+    The gold logit is extracted with a one-hot contraction, NOT
+    take_along_axis: a gather over the model-sharded vocab axis would force
+    GSPMD to all-gather the full fp32 logits (tens of GB per device at 1M
+    tokens x 150k vocab); the contraction reduces over the sharded axis with
+    one small all-reduce instead.
+    """
+    logz = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    onehot = jax.nn.one_hot(labels, logits.shape[-1], dtype=logits.dtype)
+    gold = jnp.einsum("...v,...v->...", logits, onehot).astype(jnp.float32)
+    return jnp.mean(logz - gold)

@@ -1,0 +1,148 @@
+"""Mamba (S6) block for the Jamba hybrid architecture.
+
+Training/prefill uses a chunked parallel scan (pure jnp two-phase chunk
+formulation mirroring :mod:`repro.kernels.mamba_scan`, which is the Pallas
+version validated against the same oracle); decode keeps O(1) recurrent
+state per layer — this is what makes the long_500k shape tractable.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .blocks import init_linear
+
+
+def init_mamba(key, cfg, *, stack=(), dtype=jnp.float32):
+    d, di, n, dc = cfg.d_model, cfg.mamba_d_inner, cfg.mamba_d_state, cfg.mamba_d_conv
+    ks = jax.random.split(key, 7)
+    return {
+        "w_in": init_linear(ks[0], d, 2 * di, stack=stack, dtype=dtype),
+        "w_conv": 0.1 * jax.random.normal(ks[1], (*stack, dc, di), dtype),
+        "w_x_dbc": init_linear(ks[2], di, cfg.mamba_dt_rank + 2 * n, stack=stack,
+                               dtype=dtype),
+        "w_dt": init_linear(ks[3], cfg.mamba_dt_rank, di, stack=stack, dtype=dtype),
+        "a_log": jnp.broadcast_to(
+            jnp.log(jnp.arange(1, n + 1, dtype=dtype)), (*stack, di, n)
+        ).copy(),
+        "d_skip": jnp.ones((*stack, di), dtype),
+        "w_out": init_linear(ks[5], di, d, stack=stack, dtype=dtype),
+    }
+
+
+def _ssm_params(p, u, cfg):
+    """u: (B, L, di) -> dt, A, Bmat, Cmat."""
+    n, rk = cfg.mamba_d_state, cfg.mamba_dt_rank
+    dbc = u @ p["w_x_dbc"]                                    # (B,L,rk+2n)
+    dt = jax.nn.softplus(dbc[..., :rk] @ p["w_dt"])           # (B,L,di)
+    bmat = dbc[..., rk : rk + n]                              # (B,L,n)
+    cmat = dbc[..., rk + n :]                                 # (B,L,n)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))              # (di,n)
+    return dt, a, bmat, cmat
+
+
+def _causal_conv(p, u, conv_state=None):
+    """Depthwise causal conv1d. u: (B, L, di)."""
+    dc = p["w_conv"].shape[0]
+    state_dtype = conv_state.dtype if conv_state is not None else u.dtype
+    if conv_state is None:
+        pad = jnp.zeros((u.shape[0], dc - 1, u.shape[2]), u.dtype)
+    else:
+        pad = conv_state.astype(u.dtype)  # don't let f32 state promote u
+    full = jnp.concatenate([pad, u], axis=1)                  # (B, L+dc-1, di)
+    out = sum(
+        full[:, i : i + u.shape[1]] * p["w_conv"][i][None, None]
+        for i in range(dc)
+    )
+    new_state = (full[:, -(dc - 1) :] if dc > 1 else pad).astype(state_dtype)
+    return jax.nn.silu(out), new_state
+
+
+def _chunked_scan(x, dt, a, bmat, cmat, chunk: int):
+    """Two-phase chunked S6 scan in jnp (matches kernels.ref oracle)."""
+    b, l, di = x.shape
+    n = a.shape[1]
+    pad = (-l) % chunk
+    if pad:
+        x, dt, bmat, cmat = (
+            jnp.pad(v, ((0, 0), (0, pad), (0, 0))) for v in (x, dt, bmat, cmat)
+        )
+    lp = x.shape[1]
+    nc = lp // chunk
+
+    def local(chunk_inputs):
+        xx, dd, bb, cc = chunk_inputs  # (chunk, di) (chunk, di) (chunk, n) x2
+
+        def step(h, inp):
+            x_t, d_t, b_t, c_t = inp
+            h = jnp.exp(d_t[:, None] * a) * h + (d_t * x_t)[:, None] * b_t[None]
+            return h, jnp.sum(h * c_t[None], axis=1)
+
+        h, y = jax.lax.scan(step, jnp.zeros((di, n), jnp.float32),
+                            (xx, dd, bb, cc))
+        return y, h
+
+    xc = x.reshape(b, nc, chunk, di).astype(jnp.float32)
+    dc_ = dt.reshape(b, nc, chunk, di).astype(jnp.float32)
+    bc = bmat.reshape(b, nc, chunk, n).astype(jnp.float32)
+    cc = cmat.reshape(b, nc, chunk, n).astype(jnp.float32)
+
+    y_loc, s_loc = jax.vmap(jax.vmap(local))((xc, dc_, bc, cc))
+    # propagate chunk-initial states
+    decay = jnp.exp(dc_.sum(axis=2)[..., None] * a[None, None])  # (B,nc,di,n)
+
+    def comb(h, inp):
+        dec, s = inp
+        return dec * h + s, h
+
+    _, h_init = jax.lax.scan(
+        comb,
+        jnp.zeros((b, di, n), jnp.float32),
+        (jnp.moveaxis(decay, 1, 0), jnp.moveaxis(s_loc, 1, 0)),
+    )
+    h_init = jnp.moveaxis(h_init, 0, 1)                       # (B,nc,di,n)
+    # inject initial-state contribution: y_t += C_t . (prefix-decay h_init)
+    dt_cum = jnp.cumsum(dc_, axis=2)                          # (B,nc,chunk,di)
+    pref = jnp.exp(dt_cum[..., None] * a[None, None, None])   # (B,nc,ch,di,n)
+    y_corr = jnp.einsum("bgcn,bgcdn,bgdn->bgcd", cc, pref, h_init)
+    y = (y_loc + y_corr).reshape(b, lp, di)[:, :l]
+    h_final = decay[:, -1] * h_init[:, -1] + s_loc[:, -1]
+    return y.astype(x.dtype), h_final
+
+
+def mamba_forward(p, x, cfg):
+    """Full-sequence block. x: (B, L, D)."""
+    u = x @ p["w_in"]
+    u, gate = jnp.split(u, 2, axis=-1)
+    u, _ = _causal_conv(p, u)
+    dt, a, bmat, cmat = _ssm_params(p, u, cfg)
+    y, _ = _chunked_scan(u, dt, a, bmat, cmat, cfg.mamba_chunk)
+    y = y + u * p["d_skip"]
+    y = y * jax.nn.silu(gate)
+    return y @ p["w_out"]
+
+
+def mamba_init_state(cfg, batch, dtype=jnp.float32):
+    di, n, dc = cfg.mamba_d_inner, cfg.mamba_d_state, cfg.mamba_d_conv
+    return {
+        "ssm": jnp.zeros((batch, di, n), dtype),
+        "conv": jnp.zeros((batch, dc - 1, di), dtype),
+    }
+
+
+def mamba_decode(p, x, state, cfg):
+    """One-token recurrent step. x: (B, 1, D)."""
+    u = x @ p["w_in"]
+    u, gate = jnp.split(u, 2, axis=-1)
+    u, conv_state = _causal_conv(p, u, state["conv"])
+    dt, a, bmat, cmat = _ssm_params(p, u, cfg)
+    d_t = dt[:, 0].astype(jnp.float32)                        # (B, di)
+    h = state["ssm"]
+    h = jnp.exp(d_t[..., None] * a[None]) * h + (
+        d_t * u[:, 0].astype(jnp.float32)
+    )[..., None] * bmat[:, 0, None, :].astype(jnp.float32)
+    y = jnp.sum(h * cmat[:, 0, None, :].astype(jnp.float32), axis=-1)
+    y = y.astype(x.dtype)[:, None] + u * p["d_skip"]
+    y = y * jax.nn.silu(gate)
+    return y @ p["w_out"], {"ssm": h, "conv": conv_state}

@@ -1,0 +1,309 @@
+"""Mixture-of-Experts layer (DeepSeekMoE / DeepSeek-V3 / Jamba style).
+
+Fine-grained experts with optional shared experts and top-k routing.  Three
+dispatch modes, selectable per config (the progression is a §Perf hillclimb
+— see EXPERIMENTS.md):
+
+* ``onehot``    — GShard-classic dense dispatch/combine einsums with a
+  (tokens, E, C) one-hot tensor.  Fully SPMD-friendly, but the dispatch
+  einsums burn tokens*E*C*D MACs of non-useful compute.
+* ``gather``    — capacity dispatch via gather/scatter.  Near-zero FLOP
+  overhead single-device, but the computed-index scatter defeats GSPMD
+  sharding propagation: under jit the expert compute REPLICATES per chip
+  (measured 310x FLOP blowup on deepseek-v3 — see EXPERIMENTS.md §Perf).
+* ``shard_map`` — explicit expert parallelism (default on a mesh): tokens
+  stay data-sharded and activations are replicated over the model axis, so
+  each (data, model) shard locally dispatches its tokens to ITS E/model
+  expert slice, runs them, and a psum over "model" combines the partial
+  outputs.  No (T,E,C) dense einsum, no replicated compute; the only
+  collective is the same-size psum TP already pays for an FFN.
+
+All modes drop overflow tokens beyond per-expert capacity (standard
+capacity-factor semantics) and add the switch-style load-balancing aux loss.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .blocks import init_linear, init_swiglu, swiglu_ffn
+
+
+def init_moe(key, cfg, *, stack=(), dtype=jnp.float32):
+    d, e, fe = cfg.d_model, cfg.moe_experts, cfg.moe_d_ff
+    ks = jax.random.split(key, 3)
+    p = {
+        "router": init_linear(ks[0], d, e, stack=stack, dtype=dtype),
+        "experts": init_swiglu(ks[1], d, fe, stack=(*stack, e), dtype=dtype),
+    }
+    if cfg.moe_shared > 0:
+        p["shared"] = init_swiglu(ks[2], d, fe * cfg.moe_shared, stack=stack,
+                                  dtype=dtype)
+    return p
+
+
+def _routing(p, x, cfg):
+    """Common router: top-k gates + aux loss. x: (T, D)."""
+    t, d = x.shape
+    e, k = cfg.moe_experts, cfg.moe_top_k
+    logits = (x @ p["router"]).astype(jnp.float32)            # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, k)                      # (T, k)
+    gates = gates / jnp.clip(gates.sum(-1, keepdims=True), 1e-9)
+    # switch aux loss: E * sum_e (frac_tokens_e * mean_prob_e)
+    onehot_top1 = jax.nn.one_hot(idx[:, 0], e, dtype=jnp.float32)
+    aux = e * jnp.mean(jnp.mean(onehot_top1, axis=0) * jnp.mean(probs, axis=0))
+    return gates.astype(x.dtype), idx, aux
+
+
+def _capacity(cfg, tokens: int) -> int:
+    c = int(tokens * cfg.moe_top_k * cfg.moe_capacity / cfg.moe_experts)
+    return max(c, 4)
+
+
+# ----------------------------------------------------------------------
+def _dispatch_onehot(p, x, gates, idx, cfg):
+    """GShard dense dispatch: mask (T, E, C) einsums."""
+    t, d = x.shape
+    e, k = cfg.moe_experts, cfg.moe_top_k
+    c = _capacity(cfg, t)
+    # position of each (token, choice) within its expert's capacity
+    oh_e = jax.nn.one_hot(idx, e, dtype=jnp.int32)            # (T, k, E)
+    flat = oh_e.reshape(t * k, e)
+    pos = jnp.cumsum(flat, axis=0) - flat                     # (T*k, E)
+    pos = (pos * flat).sum(-1).reshape(t, k)                  # (T, k)
+    # out-of-capacity positions one_hot to all-zeros => dropped
+    oh_c = jax.nn.one_hot(pos, c, dtype=x.dtype)              # (T, k, C)
+    oh_e = oh_e.astype(x.dtype)
+    dispatch = jnp.einsum("tke,tkc->tec", oh_e, oh_c)         # (T, E, C)
+    expert_in = jnp.einsum("tec,td->ecd", dispatch, x)        # (E, C, D)
+    expert_out = _run_experts(p, expert_in, cfg)              # (E, C, D)
+    combine = jnp.einsum("tke,tkc,tk->tec", oh_e, oh_c, gates)
+    return jnp.einsum("tec,ecd->td", combine, expert_out)
+
+
+def _dispatch_gather(p, x, gates, idx, cfg):
+    """Gather/scatter capacity dispatch (no dense (T,E,C) einsum FLOPs)."""
+    t, d = x.shape
+    e, k = cfg.moe_experts, cfg.moe_top_k
+    c = _capacity(cfg, t)
+    flat_idx = idx.reshape(-1)                                 # (T*k,)
+    oh = jax.nn.one_hot(flat_idx, e, dtype=jnp.int32)          # (T*k, E)
+    pos = (jnp.cumsum(oh, axis=0) - oh)                        # pos within expert
+    pos = jnp.take_along_axis(pos, flat_idx[:, None], axis=1)[:, 0]
+    keep = pos < c
+    slot = jnp.where(keep, flat_idx * c + pos, e * c)          # overflow slot
+    # scatter tokens into (E*C+1, D) buffer (last row = dropped)
+    src = jnp.repeat(x, k, axis=0)                             # (T*k, D)
+    buf = jnp.zeros((e * c + 1, d), x.dtype).at[slot].set(src)
+    expert_in = buf[: e * c].reshape(e, c, d)
+    expert_out = _run_experts(p, expert_in, cfg).reshape(e * c, d)
+    expert_out = jnp.concatenate([expert_out, jnp.zeros((1, d), x.dtype)], 0)
+    picked = expert_out[slot] * (gates.reshape(-1)[:, None] * keep[:, None])
+    return picked.reshape(t, k, d).sum(axis=1)
+
+
+def _run_experts(p, expert_in, cfg):
+    """Per-expert SwiGLU over (E, C, D) with stacked weights (E, D, F)."""
+    h = jax.nn.silu(
+        jnp.einsum("ecd,edf->ecf", expert_in, p["experts"]["w_gate"])
+    ) * jnp.einsum("ecd,edf->ecf", expert_in, p["experts"]["w_up"])
+    return jnp.einsum("ecf,efd->ecd", h, p["experts"]["w_down"])
+
+
+# ----------------------------------------------------------------------
+# explicit expert parallelism (shard_map)
+# ----------------------------------------------------------------------
+def _local_moe(x_loc, router, w_gate, w_up, w_down, *, cfg, batch_axes,
+               expert_axes=("model",), fsdp_gather=True):
+    """Per-shard body: x_loc (T_loc, D) token shard (replicated over the
+    model axis); w_* this rank's expert slice.
+
+    Training: expert weights enter D-sharded over "data" (FSDP/ZeRO-3) and
+    are all-gathered HERE, inside the shard_map: autodiff then transposes
+    the gather into a reduce-scatter, so the weight GRADIENT leaves
+    data-sharded too.  (Passing full-D weights through the boundary makes
+    the cotangent data-replicated, which forced GSPMD into 25-GB full-D
+    fp32 optimizer temps — EXPERIMENTS.md §Perf iteration 2.)
+
+    Inference EP (``expert_axes=("model","data")``): whole experts per chip,
+    tokens replicated, no per-step weight gathers; combine psums over both
+    axes.
+    """
+    t, d = x_loc.shape
+    e, k = cfg.moe_experts, cfg.moe_top_k
+    if fsdp_gather:
+        w_gate = jax.lax.all_gather(w_gate, "data", axis=1, tiled=True)
+        w_up = jax.lax.all_gather(w_up, "data", axis=1, tiled=True)
+        w_down = jax.lax.all_gather(w_down, "data", axis=2, tiled=True)
+    e_loc = w_gate.shape[0]
+    c = _capacity(cfg, t)
+
+    gates, idx, aux = _routing({"router": router}, x_loc, cfg)
+    rank = 0
+    for ax in expert_axes:  # linearized rank over the expert axes
+        rank = rank * jax.lax.psum(1, ax) + jax.lax.axis_index(ax)
+    lo = rank * e_loc
+    rel = idx - lo                                            # (T, k)
+    valid = (rel >= 0) & (rel < e_loc)
+
+    # position within each LOCAL expert (one_hot of clamped rel; invalid
+    # choices hash to a trash row e_loc)
+    safe_rel = jnp.where(valid, rel, e_loc)
+    oh = jax.nn.one_hot(safe_rel.reshape(-1), e_loc + 1, dtype=jnp.int32)
+    pos = jnp.cumsum(oh, axis=0) - oh                         # (T*k, E_loc+1)
+    pos = jnp.take_along_axis(pos, safe_rel.reshape(-1)[:, None], axis=1)[:, 0]
+    keep = (valid.reshape(-1) & (pos < c)).reshape(t, k)
+    slot = jnp.where(
+        keep, safe_rel * c + pos.reshape(t, k), e_loc * c
+    )                                                          # (T, k)
+
+    # dispatch per choice (k scatters of (T, D)): NEVER materialize the
+    # (T*k, D) repeat — at k=8, D=7168 that transient alone is ~8 GB/device
+    # and triples under autodiff (EXPERIMENTS.md §Perf iteration 2).
+    buf = jnp.zeros((e_loc * c + 1, d), x_loc.dtype)
+    for j in range(k):
+        buf = buf.at[slot[:, j]].set(x_loc)
+    expert_in = buf[: e_loc * c].reshape(e_loc, c, d)
+    h = jax.nn.silu(
+        jnp.einsum("ecd,edf->ecf", expert_in, w_gate)
+    ) * jnp.einsum("ecd,edf->ecf", expert_in, w_up)
+    expert_out = jnp.einsum("ecf,efd->ecd", h, w_down).reshape(e_loc * c, d)
+    expert_out = jnp.concatenate(
+        [expert_out, jnp.zeros((1, d), x_loc.dtype)], axis=0
+    )
+    y_partial = jnp.zeros_like(x_loc)
+    for j in range(k):
+        w = (gates[:, j] * keep[:, j]).astype(x_loc.dtype)[:, None]
+        y_partial = y_partial + expert_out[slot[:, j]] * w
+    y = jax.lax.psum(y_partial, expert_axes)
+    if batch_axes:
+        aux = jax.lax.pmean(aux, batch_axes)
+    return y, aux
+
+
+def _dispatch_shard_map(p, x, cfg, mesh):
+    """Expert-parallel MoE over the ambient mesh. x: (T, D) global."""
+    from jax.experimental.shard_map import shard_map
+
+    from repro.launch.sharding import batch_axes as _batch_axes
+
+    b_ax = _batch_axes(mesh)
+    body = functools.partial(_local_moe, cfg=cfg, batch_axes=b_ax)
+    fn = shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(
+            P(b_ax, None),                 # tokens: data-sharded
+            P(None, None),                 # router: replicated
+            P("model", "data", None),      # expert slices, D FSDP-sharded
+            P("model", "data", None),
+            P("model", None, "data"),      # w_down: (E, F, D)
+        ),
+        out_specs=(P(b_ax, None), P()),
+        check_rep=False,
+    )
+    return fn(
+        x, p["router"], p["experts"]["w_gate"], p["experts"]["w_up"],
+        p["experts"]["w_down"],
+    )
+
+
+def _dispatch_inference_ep(p, x, cfg, mesh):
+    """Serving-time expert placement (weight-stationary, no per-step weight
+    movement — §Perf iteration 6).
+
+    * E divisible by model*data: whole experts per chip over BOTH axes;
+      the (small) decode token batch is replicated and one psum over both
+      axes combines.
+    * otherwise: experts over the model axis only (whole-D slices, no FSDP
+      gathers); tokens stay data-sharded when divisible, else replicated.
+    """
+    from jax.experimental.shard_map import shard_map
+
+    from repro.launch.sharding import batch_axes as _batch_axes
+
+    n_model = mesh.shape["model"]
+    n_data = 1
+    for ax in _batch_axes(mesh):
+        n_data *= mesh.shape[ax]
+
+    if cfg.moe_experts % (n_model * n_data) == 0:
+        ep_axes: tuple = ("model", "data")
+        tok_spec = P(None, None)
+        b_ax: tuple = ()
+    else:
+        ep_axes = ("model",)
+        if x.shape[0] % n_data == 0:
+            tok_spec = P(_batch_axes(mesh), None)
+            b_ax = _batch_axes(mesh)
+        else:
+            tok_spec = P(None, None)
+            b_ax = ()
+
+    body = functools.partial(
+        _local_moe, cfg=cfg, batch_axes=b_ax, expert_axes=ep_axes,
+        fsdp_gather=False,
+    )
+    fn = shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(
+            tok_spec,
+            P(None, None),
+            P(ep_axes, None, None),        # whole experts per rank
+            P(ep_axes, None, None),
+            P(ep_axes, None, None),
+        ),
+        out_specs=(tok_spec, P()),
+        check_rep=False,
+    )
+    return fn(
+        x, p["router"], p["experts"]["w_gate"], p["experts"]["w_up"],
+        p["experts"]["w_down"],
+    )
+
+
+# ----------------------------------------------------------------------
+def moe_forward(p, x, cfg):
+    """x: (B, S, D) -> (y, aux_loss)."""
+    from repro.launch.sharding import current_mesh
+
+    b, s, d = x.shape
+    flat = x.reshape(b * s, d)
+    mesh = current_mesh()
+    dispatch = cfg.moe_dispatch
+    if (
+        cfg.inference_ep
+        and mesh is not None
+        and cfg.moe_experts % mesh.shape["model"] == 0
+    ):
+        dispatch = "inference_ep"
+    elif dispatch == "shard_map":
+        if mesh is None or cfg.moe_experts % mesh.shape["model"] != 0:
+            dispatch = "gather"  # no mesh (smoke) or indivisible experts
+        else:
+            from repro.launch.sharding import batch_axes as _ba
+
+            n_data = 1
+            for ax in _ba(mesh):
+                n_data *= mesh.shape[ax]
+            if flat.shape[0] % n_data != 0:
+                dispatch = "gather"  # e.g. batch-1 long-context decode
+    if dispatch == "inference_ep":
+        y, aux = _dispatch_inference_ep(p, flat, cfg, mesh)
+    elif dispatch == "shard_map":
+        y, aux = _dispatch_shard_map(p, flat, cfg, mesh)
+    elif dispatch == "onehot":
+        gates, idx, aux = _routing(p, flat, cfg)
+        y = _dispatch_onehot(p, flat, gates, idx, cfg)
+    else:
+        gates, idx, aux = _routing(p, flat, cfg)
+        y = _dispatch_gather(p, flat, gates, idx, cfg)
+    if "shared" in p:
+        y = y + swiglu_ffn(p["shared"], flat)
+    return y.reshape(b, s, d), aux

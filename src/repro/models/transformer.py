@@ -1,0 +1,325 @@
+"""Composable decoder-only model over heterogeneous scanned layer stacks.
+
+Every architecture in configs/ lowers through this module:
+
+  forward       — training / prefill over full sequences (logits)
+  loss_fn       — mean token CE + MoE aux loss
+  init_params   — concrete init;  init_abstract — eval_shape (dry-run)
+  init_cache    — decode caches/states per layer
+  decode_step   — one-token decode updating the cache
+
+Layers are stacked per (repeat, group) "stack": parameters carry a leading
+``repeat`` axis and the group is executed under ``jax.lax.scan`` (optionally
+rematerialized), so HLO size and SPMD-partitioner time stay O(distinct layer
+kinds) even for 61-layer 671B-parameter configs.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, LayerSpec
+from repro.launch.sharding import logical_shard
+
+from . import attention as attn
+from . import mamba as mam
+from . import moe as moe_mod
+from . import xlstm as xl
+from .blocks import (
+    cross_entropy,
+    gelu_ffn,
+    init_gelu_ffn,
+    init_linear,
+    init_swiglu,
+    layer_norm,
+    rms_norm,
+    swiglu_ffn,
+    truncated_normal,
+)
+
+
+# ======================================================================
+# parameter init
+# ======================================================================
+def _init_layer(key, spec: LayerSpec, cfg: ArchConfig, stack, dtype):
+    ks = jax.random.split(key, 4)
+    p: dict = {}
+    if spec.mixer == "gqa":
+        p["mixer"] = attn.init_gqa(ks[0], cfg, stack=stack, dtype=dtype)
+    elif spec.mixer == "mla":
+        p["mixer"] = attn.init_mla(ks[0], cfg, stack=stack, dtype=dtype)
+    elif spec.mixer == "mamba":
+        p["mixer"] = mam.init_mamba(ks[0], cfg, stack=stack, dtype=dtype)
+    elif spec.mixer == "mlstm":
+        p["mixer"] = xl.init_mlstm(ks[0], cfg, stack=stack, dtype=dtype)
+    elif spec.mixer == "slstm":
+        p["mixer"] = xl.init_slstm(ks[0], cfg, stack=stack, dtype=dtype)
+    else:
+        raise ValueError(spec.mixer)
+
+    if spec.ffn == "swiglu":
+        p["ffn"] = init_swiglu(ks[1], cfg.d_model, cfg.d_ff, stack=stack, dtype=dtype)
+    elif spec.ffn == "gelu":
+        p["ffn"] = init_gelu_ffn(ks[1], cfg.d_model, cfg.d_ff, stack=stack,
+                                 bias=True, dtype=dtype)
+    elif spec.ffn == "moe":
+        p["ffn"] = moe_mod.init_moe(ks[1], cfg, stack=stack, dtype=dtype)
+    elif spec.ffn != "none":
+        raise ValueError(spec.ffn)
+
+    if cfg.norm == "rms":
+        p["norm1"] = jnp.ones((*stack, cfg.d_model), dtype)
+        if spec.ffn != "none":
+            p["norm2"] = jnp.ones((*stack, cfg.d_model), dtype)
+    else:
+        p["norm1"] = jnp.ones((*stack, cfg.d_model), dtype)
+        p["norm1_b"] = jnp.zeros((*stack, cfg.d_model), dtype)
+        if spec.ffn != "none":
+            p["norm2"] = jnp.ones((*stack, cfg.d_model), dtype)
+            p["norm2_b"] = jnp.zeros((*stack, cfg.d_model), dtype)
+    return p
+
+
+def init_params(cfg: ArchConfig, key: jax.Array, dtype=jnp.float32):
+    ks = jax.random.split(key, 4 + len(cfg.stacks))
+    params: dict = {
+        "embed": truncated_normal(ks[0], (cfg.vocab, cfg.d_model), 0.02, dtype),
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = init_linear(ks[1], cfg.d_model, cfg.vocab, dtype=dtype)
+    if cfg.frontend:
+        params["frontend_proj"] = init_linear(ks[2], cfg.d_model, cfg.d_model,
+                                              dtype=dtype)
+    for si, (repeat, specs) in enumerate(cfg.stacks):
+        group = {}
+        gks = jax.random.split(ks[3 + si], len(specs))
+        for li, spec in enumerate(specs):
+            group[f"l{li}"] = _init_layer(gks[li], spec, cfg, (repeat,), dtype)
+        params[f"stack{si}"] = group
+    return params
+
+
+def init_abstract(cfg: ArchConfig):
+    """Shape-only params (no allocation) for the dry-run."""
+    return jax.eval_shape(
+        lambda k: init_params(cfg, k, dtype=cfg.activation_dtype),
+        jax.ShapeDtypeStruct((2,), jnp.uint32),
+    )
+
+
+# ======================================================================
+# forward (training / prefill)
+# ======================================================================
+def _norm(p, name, x, cfg):
+    if cfg.norm == "rms":
+        return rms_norm(p[name], x)
+    return layer_norm(p[name], p[name + "_b"], x)
+
+
+def _apply_layer(p, spec: LayerSpec, x, cfg, positions):
+    h = _norm(p, "norm1", x, cfg)
+    if spec.mixer == "gqa":
+        h = attn.gqa_forward(p["mixer"], h, cfg, positions=positions)
+    elif spec.mixer == "mla":
+        h = attn.mla_forward(p["mixer"], h, cfg, positions=positions)
+    elif spec.mixer == "mamba":
+        h = mam.mamba_forward(p["mixer"], h, cfg)
+    elif spec.mixer == "mlstm":
+        h = xl.mlstm_forward(p["mixer"], h, cfg)
+    elif spec.mixer == "slstm":
+        h = xl.slstm_forward(p["mixer"], h, cfg)
+    x = x + h
+    aux = jnp.zeros((), jnp.float32)
+    if spec.ffn != "none":
+        h = _norm(p, "norm2", x, cfg)
+        if spec.ffn == "swiglu":
+            h = swiglu_ffn(p["ffn"], h)
+        elif spec.ffn == "gelu":
+            h = gelu_ffn(p["ffn"], h)
+        else:
+            h, aux = moe_mod.moe_forward(p["ffn"], h, cfg)
+        x = x + h
+    x = logical_shard(x, "act")
+    return x, aux
+
+
+def _run_stacks(params, x, cfg, positions):
+    """Scan every (repeat, group) stack over the sequence of layers."""
+    aux_total = jnp.zeros((), jnp.float32)
+    for si, (repeat, specs) in enumerate(cfg.stacks):
+        gp = params[f"stack{si}"]
+
+        def group_fn(x, layer_params, specs=specs):
+            aux = jnp.zeros((), jnp.float32)
+            for li, spec in enumerate(specs):
+                x, a = _apply_layer(layer_params[f"l{li}"], spec, x, cfg, positions)
+                aux = aux + a
+            return x, aux
+
+        fn = jax.checkpoint(group_fn) if cfg.remat == "full" else group_fn
+        if repeat == 1:
+            one = jax.tree.map(lambda t: t[0], gp)
+            x, aux = fn(x, one)
+            aux_total = aux_total + aux
+        elif cfg.layer_unroll:
+            for r in range(repeat):
+                one = jax.tree.map(lambda t, r=r: t[r], gp)
+                x, aux = fn(x, one)
+                aux_total = aux_total + aux
+        else:
+            def scan_body(carry, layer_params):
+                y, aux = fn(carry, layer_params)
+                return y, aux
+
+            x, auxs = jax.lax.scan(scan_body, x, gp)
+            aux_total = aux_total + auxs.sum()
+    return x, aux_total
+
+
+def forward(params, batch: dict, cfg: ArchConfig):
+    """batch: tokens (B,S) [+ frontend_embeds (B,N,D)] -> logits (B,S,V)."""
+    tokens = batch["tokens"]
+    x = params["embed"][tokens].astype(cfg.activation_dtype)
+    n_front = 0
+    if cfg.frontend and "frontend_embeds" in batch:
+        fe = batch["frontend_embeds"].astype(cfg.activation_dtype)
+        fe = fe @ params["frontend_proj"]
+        x = jnp.concatenate([fe, x], axis=1)
+        n_front = fe.shape[1]
+    x = logical_shard(x, "act")
+    positions = jnp.arange(x.shape[1])[None, :]
+    x, aux = _run_stacks(params, x, cfg, positions)
+    x = _final_norm(params, x, cfg)
+    if n_front:
+        x = x[:, n_front:]
+    logits = x @ (
+        params["embed"].T.astype(cfg.activation_dtype)
+        if cfg.tie_embeddings
+        else params["lm_head"].astype(cfg.activation_dtype)
+    )
+    return logical_shard(logits, "logits"), aux
+
+
+def _final_norm(params, x, cfg):
+    if cfg.norm == "rms":
+        return rms_norm(params["final_norm"], x)
+    return rms_norm(params["final_norm"], x)  # final norm is RMS everywhere
+
+
+def loss_fn(params, batch: dict, cfg: ArchConfig):
+    logits, aux = forward(params, batch, cfg)
+    loss = cross_entropy(logits, batch["labels"])
+    return loss + cfg.aux_loss_weight * aux
+
+
+# ======================================================================
+# decode caches / states
+# ======================================================================
+def _init_layer_cache(spec: LayerSpec, cfg, batch, max_len, dtype):
+    if spec.mixer == "gqa":
+        return attn.gqa_init_cache(cfg, batch, max_len, dtype)
+    if spec.mixer == "mla":
+        return attn.mla_init_cache(cfg, batch, max_len, dtype)
+    if spec.mixer == "mamba":
+        return mam.mamba_init_state(cfg, batch)
+    if spec.mixer == "mlstm":
+        return xl.mlstm_init_state(cfg, batch)
+    if spec.mixer == "slstm":
+        return xl.slstm_init_state(cfg, batch)
+    raise ValueError(spec.mixer)
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    cache = {}
+    for si, (repeat, specs) in enumerate(cfg.stacks):
+        group = {}
+        for li, spec in enumerate(specs):
+            one = _init_layer_cache(spec, cfg, batch, max_len, dtype)
+            group[f"l{li}"] = jax.tree.map(
+                lambda t: jnp.broadcast_to(t[None], (repeat, *t.shape)).copy(), one
+            )
+        cache[f"stack{si}"] = group
+    return cache
+
+
+def init_cache_abstract(cfg: ArchConfig, batch: int, max_len: int):
+    return jax.eval_shape(lambda: init_cache(cfg, batch, max_len))
+
+
+def _decode_layer(p, spec: LayerSpec, x, cache, length, cfg):
+    h = _norm(p, "norm1", x, cfg)
+    if spec.mixer == "gqa":
+        h, cache = attn.gqa_decode(p["mixer"], h, cache, length, cfg)
+    elif spec.mixer == "mla":
+        h, cache = attn.mla_decode(p["mixer"], h, cache, length, cfg)
+    elif spec.mixer == "mamba":
+        h, cache = mam.mamba_decode(p["mixer"], h, cache, cfg)
+    elif spec.mixer == "mlstm":
+        h, cache = xl.mlstm_decode(p["mixer"], h, cache, cfg)
+    elif spec.mixer == "slstm":
+        h, cache = xl.slstm_decode(p["mixer"], h, cache, cfg)
+    x = x + h
+    if spec.ffn != "none":
+        h = _norm(p, "norm2", x, cfg)
+        if spec.ffn == "swiglu":
+            h = swiglu_ffn(p["ffn"], h)
+        elif spec.ffn == "gelu":
+            h = gelu_ffn(p["ffn"], h)
+        else:
+            h, _ = moe_mod.moe_forward(p["ffn"], h, cfg)
+        x = x + h
+    return x, cache
+
+
+def decode_step(params, tokens, cache, length, cfg: ArchConfig):
+    """One-token decode.  tokens: (B, 1) int32; length: scalar int32.
+
+    Returns (logits (B, 1, V), new_cache).
+    """
+    x = params["embed"][tokens].astype(cfg.activation_dtype)
+    x = logical_shard(x, "act")
+    for si, (repeat, specs) in enumerate(cfg.stacks):
+        gp = params[f"stack{si}"]
+        gc = cache[f"stack{si}"]
+
+        def group_fn(x, pc, specs=specs):
+            layer_params, layer_cache = pc
+            new_cache = {}
+            for li, spec in enumerate(specs):
+                x, c = _decode_layer(
+                    layer_params[f"l{li}"], spec, x, layer_cache[f"l{li}"],
+                    length, cfg,
+                )
+                new_cache[f"l{li}"] = c
+            return x, new_cache
+
+        if repeat == 1:
+            one_p = jax.tree.map(lambda t: t[0], gp)
+            one_c = jax.tree.map(lambda t: t[0], gc)
+            x, nc = group_fn(x, (one_p, one_c))
+            cache[f"stack{si}"] = jax.tree.map(lambda t: t[None], nc)
+        elif cfg.layer_unroll:
+            ncs = []
+            for r in range(repeat):
+                one_p = jax.tree.map(lambda t, r=r: t[r], gp)
+                one_c = jax.tree.map(lambda t, r=r: t[r], gc)
+                x, nc = group_fn(x, (one_p, one_c))
+                ncs.append(nc)
+            cache[f"stack{si}"] = jax.tree.map(
+                lambda *ts: jnp.stack(ts), *ncs
+            )
+        else:
+            x, ncs = jax.lax.scan(group_fn, x, (gp, gc))
+            cache[f"stack{si}"] = ncs
+    x = _final_norm(params, x, cfg)
+    logits = x @ (
+        params["embed"].T.astype(cfg.activation_dtype)
+        if cfg.tie_embeddings
+        else params["lm_head"].astype(cfg.activation_dtype)
+    )
+    return logits, cache

@@ -1,0 +1,278 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory, parallelizable)
+and sLSTM (scalar memory, sequential scan).
+
+mLSTM uses the chunkwise-parallel formulation: exponential input gates with
+a running log-normalizer for numerical stability; the (d_head x d_head)
+matrix memory C and normalizer n are the recurrent state, giving O(1) decode
+state — xlstm-350m therefore runs the long_500k shape.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .blocks import init_linear
+
+
+# ======================================================================
+# mLSTM
+# ======================================================================
+def init_mlstm(key, cfg, *, stack=(), dtype=jnp.float32):
+    d, h = cfg.d_model, cfg.n_heads
+    dh = cfg.xlstm_d_inner // h
+    ks = jax.random.split(key, 6)
+    return {
+        "w_qkv": init_linear(ks[0], d, 3 * cfg.xlstm_d_inner, stack=stack,
+                             dtype=dtype),
+        "w_if": init_linear(ks[1], d, 2 * h, stack=stack, dtype=dtype),
+        "b_if": jnp.tile(jnp.asarray([0.0, 3.0], dtype), (*stack, h)),
+        "w_gate": init_linear(ks[2], d, cfg.xlstm_d_inner, stack=stack, dtype=dtype),
+        "norm": jnp.ones((*stack, cfg.xlstm_d_inner), dtype),
+        "w_out": init_linear(ks[3], cfg.xlstm_d_inner, d, stack=stack, dtype=dtype),
+    }
+
+
+def _mlstm_scan(q, k, v, i_gate, f_gate):
+    """Sequential (scan) mLSTM recurrence in log-stabilized form.
+
+    q,k,v: (B, H, L, dh); i_gate,f_gate: (B, H, L) pre-activation.
+    Returns y: (B, H, L, dh).
+    """
+    b, h, l, dh = q.shape
+    logf = jax.nn.log_sigmoid(f_gate)                        # (B,H,L)
+
+    def step(carry, t_in):
+        c, n, m = carry                                      # (B,H,dh,dh) (B,H,dh) (B,H)
+        q_t, k_t, v_t, i_t, lf_t = t_in
+        m_new = jnp.maximum(lf_t + m, i_t)
+        f_eff = jnp.exp(lf_t + m - m_new)                    # (B,H)
+        i_eff = jnp.exp(i_t - m_new)
+        c = f_eff[..., None, None] * c + i_eff[..., None, None] * (
+            k_t[..., :, None] * v_t[..., None, :]
+        )
+        n = f_eff[..., None] * n + i_eff[..., None] * k_t
+        num = jnp.einsum("bhd,bhde->bhe", q_t, c)
+        den = jnp.abs(jnp.einsum("bhd,bhd->bh", q_t, n))
+        y = num / jnp.maximum(den, jnp.exp(-m_new))[..., None]
+        return (c, n, m_new), y
+
+    init = (
+        jnp.zeros((b, h, dh, dh), jnp.float32),
+        jnp.zeros((b, h, dh), jnp.float32),
+        jnp.full((b, h), -jnp.inf, jnp.float32),
+    )
+    xs = (
+        jnp.moveaxis(q, 2, 0).astype(jnp.float32),
+        jnp.moveaxis(k, 2, 0).astype(jnp.float32),
+        jnp.moveaxis(v, 2, 0).astype(jnp.float32),
+        jnp.moveaxis(i_gate, 2, 0).astype(jnp.float32),
+        jnp.moveaxis(logf, 2, 0).astype(jnp.float32),
+    )
+    _, ys = jax.lax.scan(step, init, xs)
+    return jnp.moveaxis(ys, 0, 2).astype(q.dtype)
+
+
+def _mlstm_chunkwise(q, k, v, i_gate, f_gate, chunk: int):
+    """Chunkwise-parallel mLSTM: intra-chunk attention-like term + carried
+    inter-chunk matrix state (the standard parallel training form)."""
+    b, h, l, dh = q.shape
+    pad = (-l) % chunk
+    if pad:
+        q, k, v = (jnp.pad(t, ((0, 0), (0, 0), (0, pad), (0, 0))) for t in (q, k, v))
+        i_gate = jnp.pad(i_gate, ((0, 0), (0, 0), (0, pad)))
+        f_gate = jnp.pad(f_gate, ((0, 0), (0, 0), (0, pad)), constant_values=20.0)
+    lp = q.shape[2]
+    nc = lp // chunk
+    # reshape to chunks and scan over them with the sequential cell applied
+    # per chunk in parallel form: within-chunk via masked attention matrix.
+    qc = q.reshape(b, h, nc, chunk, dh)
+    kc = k.reshape(b, h, nc, chunk, dh)
+    vc = v.reshape(b, h, nc, chunk, dh)
+    ic = i_gate.reshape(b, h, nc, chunk).astype(jnp.float32)
+    lfc = jax.nn.log_sigmoid(f_gate.reshape(b, h, nc, chunk).astype(jnp.float32))
+
+    lf_cum = jnp.cumsum(lfc, axis=-1)                         # (B,H,nc,ch)
+    lf_tot = lf_cum[..., -1]
+
+    def chunk_step(carry, t_in):
+        c, n, m = carry                                       # inter-chunk state
+        q_t, k_t, v_t, i_t, lfcum_t, lftot_t = t_in
+        # log weights of each in-chunk key for queries at each position
+        # a_ij = i_j + lfcum_i - lfcum_j   (j <= i)
+        a = i_t[..., None, :] + lfcum_t[..., :, None] - lfcum_t[..., None, :]
+        mask = jnp.tril(jnp.ones((a.shape[-2], a.shape[-1]), bool))
+        a = jnp.where(mask, a, -jnp.inf)                      # (B,H,ch,ch)
+        # state contribution log-weight: m + lfcum_i
+        b_state = m[..., None] + lfcum_t                      # (B,H,ch)
+        m_loc = jnp.maximum(jnp.max(a, axis=-1), b_state)     # (B,H,ch)
+        a_w = jnp.exp(a - m_loc[..., None])
+        s_w = jnp.exp(b_state - m_loc)
+        scores = jnp.einsum("bhid,bhjd->bhij", q_t, k_t)      # (B,H,ch,ch)
+        num = jnp.einsum("bhij,bhjd->bhid", a_w * scores, v_t) + s_w[
+            ..., None
+        ] * jnp.einsum("bhid,bhde->bhie", q_t, c)
+        den = jnp.einsum("bhij,bhij->bhi", a_w, scores) + s_w * jnp.einsum(
+            "bhid,bhd->bhi", q_t, n
+        )
+        y = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_loc))[..., None]
+        # update inter-chunk state to end of chunk
+        key_logw = i_t + lftot_t[..., None] - lfcum_t          # (B,H,ch)
+        m_new = jnp.maximum(lftot_t + m, jnp.max(key_logw, axis=-1))
+        c = jnp.exp(lftot_t + m - m_new)[..., None, None] * c + jnp.einsum(
+            "bhj,bhjd,bhje->bhde",
+            jnp.exp(key_logw - m_new[..., None]),
+            k_t,
+            v_t,
+        )
+        n = jnp.exp(lftot_t + m - m_new)[..., None] * n + jnp.einsum(
+            "bhj,bhjd->bhd",
+            jnp.exp(key_logw - m_new[..., None]),
+            k_t,
+        )
+        return (c, n, m_new), y
+
+    init = (
+        jnp.zeros((b, h, dh, dh), jnp.float32),
+        jnp.zeros((b, h, dh), jnp.float32),
+        jnp.full((b, h), -1e30, jnp.float32),
+    )
+    xs = (
+        jnp.moveaxis(qc, 2, 0).astype(jnp.float32),
+        jnp.moveaxis(kc, 2, 0).astype(jnp.float32),
+        jnp.moveaxis(vc, 2, 0).astype(jnp.float32),
+        jnp.moveaxis(ic, 2, 0),
+        jnp.moveaxis(lf_cum, 2, 0),
+        jnp.moveaxis(lf_tot, 2, 0),
+    )
+    _, ys = jax.lax.scan(chunk_step, init, xs)
+    y = jnp.moveaxis(ys, 0, 2).reshape(b, h, lp, dh)[:, :, :l]
+    return y.astype(q.dtype)
+
+
+def mlstm_forward(p, x, cfg):
+    b, l, d = x.shape
+    h = cfg.n_heads
+    di = cfg.xlstm_d_inner
+    dh = di // h
+    qkv = x @ p["w_qkv"]
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    q = q.reshape(b, l, h, dh).transpose(0, 2, 1, 3) / jnp.sqrt(float(dh))
+    k = k.reshape(b, l, h, dh).transpose(0, 2, 1, 3)
+    v = v.reshape(b, l, h, dh).transpose(0, 2, 1, 3)
+    if_g = x @ p["w_if"] + p["b_if"]
+    if_g = if_g.reshape(b, l, 2, h)
+    i_gate = if_g[:, :, 0].transpose(0, 2, 1)
+    f_gate = if_g[:, :, 1].transpose(0, 2, 1)
+    y = _mlstm_chunkwise(q, k, v, i_gate, f_gate, cfg.xlstm_chunk)
+    y = y.transpose(0, 2, 1, 3).reshape(b, l, di)
+    y = y * p["norm"] * jax.nn.silu(x @ p["w_gate"])
+    return y @ p["w_out"]
+
+
+def mlstm_init_state(cfg, batch, dtype=jnp.float32):
+    h = cfg.n_heads
+    dh = cfg.xlstm_d_inner // h
+    return {
+        "c": jnp.zeros((batch, h, dh, dh), dtype),
+        "n": jnp.zeros((batch, h, dh), dtype),
+        "m": jnp.full((batch, h), -1e30, dtype),
+    }
+
+
+def mlstm_decode(p, x, state, cfg):
+    """One-token recurrent mLSTM step."""
+    b, _, d = x.shape
+    h = cfg.n_heads
+    di = cfg.xlstm_d_inner
+    dh = di // h
+    qkv = x @ p["w_qkv"]
+    q, k, v = jnp.split(qkv[:, 0], 3, axis=-1)
+    q = q.reshape(b, h, dh).astype(jnp.float32) / jnp.sqrt(float(dh))
+    k = k.reshape(b, h, dh).astype(jnp.float32)
+    v = v.reshape(b, h, dh).astype(jnp.float32)
+    if_g = (x @ p["w_if"] + p["b_if"])[:, 0].reshape(b, 2, h).astype(jnp.float32)
+    i_t, lf_t = if_g[:, 0], jax.nn.log_sigmoid(if_g[:, 1])
+    c, n, m = state["c"].astype(jnp.float32), state["n"].astype(jnp.float32), state["m"].astype(jnp.float32)
+    m_new = jnp.maximum(lf_t + m, i_t)
+    f_eff = jnp.exp(lf_t + m - m_new)
+    i_eff = jnp.exp(i_t - m_new)
+    c = f_eff[..., None, None] * c + i_eff[..., None, None] * (
+        k[..., :, None] * v[..., None, :]
+    )
+    n = f_eff[..., None] * n + i_eff[..., None] * k
+    num = jnp.einsum("bhd,bhde->bhe", q, c)
+    den = jnp.abs(jnp.einsum("bhd,bhd->bh", q, n))
+    y = num / jnp.maximum(den, jnp.exp(-m_new))[..., None]
+    y = y.reshape(b, 1, di).astype(x.dtype)
+    y = y * p["norm"] * jax.nn.silu(x @ p["w_gate"])
+    return y @ p["w_out"], {"c": c, "n": n, "m": m_new}
+
+
+# ======================================================================
+# sLSTM (scalar memory, sequential)
+# ======================================================================
+def init_slstm(key, cfg, *, stack=(), dtype=jnp.float32):
+    d = cfg.d_model
+    di = cfg.xlstm_d_inner
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gates": init_linear(ks[0], d, 4 * di, stack=stack, dtype=dtype),
+        "r_gates": init_linear(ks[1], di, 4 * di, stack=stack,
+                               scale=1.0 / float(di) ** 0.5, dtype=dtype),
+        "w_out": init_linear(ks[2], di, d, stack=stack, dtype=dtype),
+    }
+
+
+def slstm_forward(p, x, cfg):
+    """Sequential sLSTM over the sequence. x: (B, L, D)."""
+    b, l, d = x.shape
+    di = cfg.xlstm_d_inner
+    wx = x @ p["w_gates"]                                     # (B, L, 4di)
+
+    def step(carry, wx_t):
+        c, n, m, h = carry
+        g = wx_t + h @ p["r_gates"]
+        z, i, f, o = jnp.split(g.astype(jnp.float32), 4, axis=-1)
+        m_new = jnp.maximum(jax.nn.log_sigmoid(f) + m, i)
+        i_eff = jnp.exp(i - m_new)
+        f_eff = jnp.exp(jax.nn.log_sigmoid(f) + m - m_new)
+        c = f_eff * c + i_eff * jnp.tanh(z)
+        n = f_eff * n + i_eff
+        h_new = (jax.nn.sigmoid(o) * c / jnp.maximum(n, 1e-6)).astype(x.dtype)
+        return (c, n, m_new, h_new), h_new
+
+    init = (
+        jnp.zeros((b, di), jnp.float32),
+        jnp.zeros((b, di), jnp.float32),
+        jnp.full((b, di), -1e30, jnp.float32),
+        jnp.zeros((b, di), x.dtype),
+    )
+    _, hs = jax.lax.scan(step, init, jnp.moveaxis(wx, 1, 0))
+    y = jnp.moveaxis(hs, 0, 1)
+    return y @ p["w_out"]
+
+
+def slstm_init_state(cfg, batch, dtype=jnp.float32):
+    di = cfg.xlstm_d_inner
+    return {
+        "c": jnp.zeros((batch, di), dtype),
+        "n": jnp.zeros((batch, di), dtype),
+        "m": jnp.full((batch, di), -1e30, dtype),
+        "h": jnp.zeros((batch, di), dtype),
+    }
+
+
+def slstm_decode(p, x, state, cfg):
+    wx = (x @ p["w_gates"])[:, 0]
+    c, n, m, h = state["c"], state["n"], state["m"], state["h"]
+    g = wx + h @ p["r_gates"]
+    z, i, f, o = jnp.split(g.astype(jnp.float32), 4, axis=-1)
+    m_new = jnp.maximum(jax.nn.log_sigmoid(f) + m, i)
+    i_eff = jnp.exp(i - m_new)
+    f_eff = jnp.exp(jax.nn.log_sigmoid(f) + m - m_new)
+    c = f_eff * c + i_eff * jnp.tanh(z)
+    n = f_eff * n + i_eff
+    h_new = (jax.nn.sigmoid(o) * c / jnp.maximum(n, 1e-6)).astype(x.dtype)
+    y = h_new[:, None] @ p["w_out"]
+    return y, {"c": c, "n": n, "m": m_new, "h": h_new}

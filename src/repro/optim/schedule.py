@@ -1,0 +1,16 @@
+"""LR schedules."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_schedule(step, *, warmup: int = 200, total: int = 10_000,
+                    floor: float = 0.1):
+    """Linear warmup then cosine decay to ``floor`` of peak (returns scale)."""
+    step = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+    # (step+1): the very first step must not have a zero learning rate
+    warm = jnp.minimum((step + 1.0) / max(warmup, 1), 1.0)
+    progress = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * progress))
+    return warm * cos

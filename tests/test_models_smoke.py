@@ -1,0 +1,175 @@
+"""Per-architecture smoke tests: reduced config, one forward/train/decode
+step on CPU; output shapes + finiteness.  (Full configs are exercised only
+via the dry-run with ShapeDtypeStructs.)"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_NAMES, ARCHS, get_arch, reduced
+from repro.models import transformer as tf
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _batch(cfg, b=2, s=64):
+    batch = {
+        "tokens": jnp.asarray(
+            np.random.default_rng(0).integers(0, cfg.vocab, (b, s)), jnp.int32
+        ),
+        "labels": jnp.asarray(
+            np.random.default_rng(1).integers(0, cfg.vocab, (b, s)), jnp.int32
+        ),
+    }
+    if cfg.frontend:
+        batch["frontend_embeds"] = jnp.ones(
+            (b, cfg.frontend_tokens, cfg.d_model), jnp.float32
+        )
+    return batch
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_forward_shapes_and_finite(name):
+    cfg = reduced(get_arch(name))
+    params = tf.init_params(cfg, KEY)
+    batch = _batch(cfg)
+    logits, aux = tf.forward(params, batch, cfg)
+    assert logits.shape == (2, 64, cfg.vocab)
+    assert bool(jnp.isfinite(logits).all())
+    assert bool(jnp.isfinite(aux))
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_one_train_step_improves_nothing_breaks(name):
+    from repro.launch.steps import make_train_step
+    from repro.optim import AdamWConfig, adamw_init
+
+    cfg = reduced(get_arch(name))
+    params = tf.init_params(cfg, KEY)
+    opt = AdamWConfig(lr=1e-3)
+    state = adamw_init(params, opt)
+    step = make_train_step(cfg, opt)
+    batch = _batch(cfg)
+    params2, state2, metrics = step(params, state, batch)
+    assert bool(jnp.isfinite(metrics["loss"]))
+    assert bool(jnp.isfinite(metrics["grad_norm"]))
+    assert int(state2["step"]) == 1
+    # params actually moved
+    delta = sum(
+        float(jnp.abs(a - b).sum())
+        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(params2))
+    )
+    assert delta > 0
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_decode_matches_forward_prefix(name):
+    """Teacher-forced decode must reproduce forward() logits step by step.
+
+    Recurrent families (ssm/hybrid) accumulate fp-ordering differences
+    between the chunkwise-parallel forward and the sequential decode cell —
+    state feedback compounds ~1e-6/block into ~1e-2 over 12 steps x 8-16
+    blocks, so their tolerance is looser (both paths are validated exactly
+    at block level elsewhere)."""
+    cfg = reduced(get_arch(name))
+    if cfg.frontend:
+        pytest.skip("frontend prefix changes positions; covered separately")
+    params = tf.init_params(cfg, KEY)
+    b, s = 2, 12
+    batch = _batch(cfg, b, s)
+    full_logits, _ = tf.forward(params, batch, cfg)
+
+    cache = tf.init_cache(cfg, b, 32, dtype=jnp.float32)
+    outs = []
+    for i in range(s):
+        logits, cache = tf.decode_step(
+            params, batch["tokens"][:, i : i + 1], cache, jnp.int32(i), cfg
+        )
+        outs.append(logits[:, 0])
+    dec = np.asarray(jnp.stack(outs, axis=1))
+    ref = np.asarray(full_logits)
+    if cfg.family in ("ssm", "hybrid"):
+        # the mLSTM normalizer max(|q.n|, e^-m) flips sides under fp noise
+        # and the recurrence amplifies it: assert distributional agreement
+        bad = np.abs(dec - ref) > (5e-2 + 5e-2 * np.abs(ref))
+        assert bad.mean() < 0.08, f"{bad.mean():.3f} of logits diverged"
+        np.testing.assert_array_equal(
+            np.argmax(dec[:, :4], -1), np.argmax(ref[:, :4], -1)
+        )
+    else:
+        np.testing.assert_allclose(dec, ref, atol=2e-2, rtol=2e-2)
+
+
+def test_train_step_grad_accum_equivalence():
+    """accum=4 must equal accum=1 up to accumulation-dtype rounding."""
+    from repro.launch.steps import make_train_step
+    from repro.optim import AdamWConfig, adamw_init
+
+    cfg = reduced(get_arch("qwen2-1.5b"))
+    params = tf.init_params(cfg, KEY)
+    opt = AdamWConfig(lr=1e-3)
+    batch = _batch(cfg, b=4, s=32)
+    s1 = make_train_step(cfg, opt)(params, adamw_init(params, opt), batch)
+    s4 = make_train_step(cfg, opt, accum=4, accum_dtype=jnp.float32)(
+        params, adamw_init(params, opt), batch
+    )
+    assert np.isclose(float(s1[2]["loss"]), float(s4[2]["loss"]), rtol=1e-4)
+    for a, b in zip(jax.tree.leaves(s1[0]), jax.tree.leaves(s4[0])):
+        np.testing.assert_allclose(
+            np.asarray(a, np.float32), np.asarray(b, np.float32),
+            atol=5e-3, rtol=5e-2,
+        )
+
+
+def test_moe_dispatch_modes_agree():
+    """gather and onehot dispatch produce identical outputs (same drops)."""
+    import dataclasses
+
+    from repro.models import moe as moe_mod
+
+    cfg = reduced(get_arch("deepseek-moe-16b"))
+    p = moe_mod.init_moe(jax.random.PRNGKey(1), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(2), (2, 32, cfg.d_model))
+    y_g, aux_g = moe_mod.moe_forward(
+        p, x, dataclasses.replace(cfg, moe_dispatch="gather")
+    )
+    y_o, aux_o = moe_mod.moe_forward(
+        p, x, dataclasses.replace(cfg, moe_dispatch="onehot")
+    )
+    np.testing.assert_allclose(np.asarray(y_g), np.asarray(y_o), atol=2e-5)
+    np.testing.assert_allclose(float(aux_g), float(aux_o), rtol=1e-6)
+
+
+def test_mlstm_chunkwise_matches_sequential():
+    from repro.models import xlstm as xl
+
+    b, h, l, dh = 1, 2, 96, 16
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(size=(b, h, l, dh)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, h, l, dh)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, h, l, dh)), jnp.float32)
+    i_g = jnp.asarray(rng.normal(size=(b, h, l)), jnp.float32)
+    f_g = jnp.asarray(2.0 + rng.normal(size=(b, h, l)), jnp.float32)
+    seq = xl._mlstm_scan(q, k, v, i_g, f_g)
+    par = xl._mlstm_chunkwise(q, k, v, i_g, f_g, chunk=32)
+    np.testing.assert_allclose(np.asarray(seq), np.asarray(par),
+                               atol=2e-4, rtol=1e-3)
+
+
+def test_mamba_forward_matches_kernel_oracle():
+    """models/mamba chunked scan == kernels/ref sequential oracle."""
+    from repro.kernels import ref
+    from repro.models.mamba import _chunked_scan
+
+    B, L, D, N = 1, 96, 32, 8
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.normal(size=(B, L, D)), jnp.float32)
+    dt = jnp.asarray(0.05 + 0.1 * rng.random((B, L, D)), jnp.float32)
+    a = jnp.asarray(-np.exp(rng.normal(size=(D, N))), jnp.float32)
+    bm = jnp.asarray(rng.normal(size=(B, L, N)), jnp.float32)
+    cm = jnp.asarray(rng.normal(size=(B, L, N)), jnp.float32)
+    y, h = _chunked_scan(x, dt, a, bm, cm, chunk=32)
+    ye, he = ref.mamba_scan_ref(x, dt, a, bm, cm)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ye), atol=3e-3)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(he), atol=3e-3)

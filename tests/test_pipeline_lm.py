@@ -1,0 +1,60 @@
+"""Beyond-paper SDFG pipeline analysis for the LM architectures."""
+
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.core.maxplus import mcr_howard
+from repro.core.pipeline import analyze_pipeline, pipeline_sdfg, plan_stages
+
+
+def test_stage_plan_balances_flops():
+    cfg = get_arch("qwen1.5-110b")
+    plan = plan_stages(cfg, 8, micro_tokens=4096)
+    f = np.array(plan.stage_flops)
+    assert f.min() > 0
+    assert f.max() / f.min() < 1.6  # roughly balanced
+
+
+def test_pipeline_period_equals_bottleneck_stage():
+    """For a balanced pipeline with cheap comm, MCM == slowest stage's
+    fwd+bwd time — the classic 1F1B steady state."""
+    cfg = get_arch("qwen2-1.5b")
+    plan = plan_stages(cfg, 4, micro_tokens=2048)
+    g = pipeline_sdfg(plan, n_microbatches=16)
+    period = mcr_howard(g)
+    s = len(plan.stage_flops)
+    per_stage = [g.exec_time[i] + g.exec_time[2 * s - 1 - i] for i in range(s)]
+    assert period >= max(per_stage) - 1e-12
+    assert period <= 1.5 * max(per_stage)
+
+
+def test_more_microbatches_reduce_bubble():
+    cfg = get_arch("codeqwen1.5-7b")
+    b8 = analyze_pipeline(cfg, n_stages=4, n_microbatches=8,
+                          micro_tokens=2048).bubble_frac
+    b64 = analyze_pipeline(cfg, n_stages=4, n_microbatches=64,
+                           micro_tokens=2048).bubble_frac
+    assert b64 < b8
+
+
+def test_matches_classic_bubble_formula():
+    """With zero comm and perfectly balanced stages, bubble ~ (S-1)/(M+S-1)."""
+    cfg = get_arch("qwen2-1.5b")
+    S, M = 4, 16
+    rep = analyze_pipeline(cfg, n_stages=S, n_microbatches=M,
+                           micro_tokens=2048)
+    classic = (S - 1) / (M + S - 1)
+    assert rep.bubble_frac == pytest.approx(classic, rel=0.6)
+
+
+@pytest.mark.parametrize("arch", ["deepseek-v3-671b", "jamba-v0.1-52b"])
+def test_hbm_gate_detects_oversized_stages(arch):
+    cfg = get_arch(arch)
+    small = analyze_pipeline(cfg, n_stages=2, n_microbatches=8,
+                             micro_tokens=4096)
+    big = analyze_pipeline(cfg, n_stages=32, n_microbatches=8,
+                           micro_tokens=4096)
+    # 671B over 2 stages cannot fit a 16GB chip; over 32 it parks less/stage
+    assert not small.hbm_fit
+    assert big.tokens_per_s > 0

@@ -1,0 +1,156 @@
+"""Self-timed executor, static orders, run-time admission (paper §4.4-§5)."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    DYNAP_SE,
+    HardwareState,
+    SelfTimedExecutor,
+    analyze_throughput,
+    bind_ours,
+    bind_pycarl,
+    bind_spinemap,
+    build_static_orders,
+    design_time_compile,
+    measured_throughput,
+    mcr_howard,
+    partition_greedy,
+    project_order,
+    random_orders,
+    runtime_admit,
+    sdfg_from_clusters,
+    single_tile_order,
+    small_app,
+    verify_deadlock_free,
+)
+from repro.core.sdfg import SDFG, Channel
+
+
+@pytest.fixture(scope="module")
+def compiled():
+    snn = small_app(220, 2600, seed=11)
+    cl = partition_greedy(snn, DYNAP_SE)
+    app = sdfg_from_clusters(cl, hw=DYNAP_SE)
+    return snn, cl, app
+
+
+def test_executor_matches_mcr_on_dedicated_tiles():
+    """1 actor per tile, strongly connected -> period == MCR exactly."""
+    n = 4
+    tau = np.array([2.0, 3.0, 1.0, 4.0])
+    channels = [Channel(i, i, 1, 1.0, kind="self") for i in range(n)]
+    for i in range(n):
+        channels.append(Channel(i, (i + 1) % n, 1 if i == n - 1 else 0, 1.0))
+    g = SDFG(n_actors=n, exec_time=tau, channels=channels)
+    hw = dataclasses.replace(DYNAP_SE, n_tiles=4)
+    binding = np.arange(n)
+    ex = SelfTimedExecutor(g, binding, hw)
+    trace = ex.run(iterations=400)
+    # compare against the MCR of the same hardware-aware graph the executor
+    # runs (incl. NoC delays + buffer back-edges); period includes the
+    # pipeline-fill transient, amortized over many iterations
+    rho = mcr_howard(ex.graph)
+    assert np.isclose(trace.period, rho, rtol=0.02), (trace.period, rho)
+    # and the raw-graph MCR is a lower bound (no resource penalties)
+    assert mcr_howard(g) <= trace.period + 1e-9
+
+
+def test_static_order_analysis_matches_simulation(compiled):
+    _, cl, app = compiled
+    b = bind_ours(cl, DYNAP_SE)
+    orders, _ = build_static_orders(app, b.binding, DYNAP_SE)
+    analytic = analyze_throughput(app, b.binding, DYNAP_SE, orders)
+    simulated = measured_throughput(app, b.binding, DYNAP_SE, orders,
+                                    iterations=40)
+    assert analytic > 0 and simulated > 0
+    assert np.isclose(analytic, simulated, rtol=0.05), (analytic, simulated)
+
+
+def test_static_order_beats_random_order(compiled):
+    _, cl, app = compiled
+    b = bind_ours(cl, DYNAP_SE)
+    static, _ = build_static_orders(app, b.binding, DYNAP_SE)
+    thr_static = measured_throughput(app, b.binding, DYNAP_SE, static)
+    worst_random = min(
+        measured_throughput(
+            app, b.binding, DYNAP_SE, random_orders(app, b.binding, DYNAP_SE,
+                                                    seed=s)
+        )
+        for s in range(3)
+    )
+    assert thr_static >= worst_random * 0.999
+
+
+def test_binding_strategies_disagree(compiled):
+    _, cl, _ = compiled
+    ours = bind_ours(cl, DYNAP_SE).binding
+    spine = bind_spinemap(cl, DYNAP_SE).binding
+    pycarl = bind_pycarl(cl, DYNAP_SE).binding
+    assert len(ours) == len(spine) == len(pycarl) == cl.n_clusters
+    for b in (ours, spine, pycarl):
+        assert b.min() >= 0 and b.max() < DYNAP_SE.n_tiles
+
+
+def test_runtime_projection_deadlock_free(compiled):
+    snn, cl, app = compiled
+    order, _ = single_tile_order(cl, DYNAP_SE)
+    assert sorted(order) == list(range(cl.n_clusters))
+    state = HardwareState(DYNAP_SE)
+    report = runtime_admit(cl, state, order)
+    assert report.throughput > 0
+    assert verify_deadlock_free(cl, DYNAP_SE, report)
+
+
+def test_runtime_admission_faster_than_design_time(compiled):
+    snn, cl, app = compiled
+    design = design_time_compile(cl, DYNAP_SE)
+    order, _ = single_tile_order(cl, DYNAP_SE)
+    state = HardwareState(DYNAP_SE)
+    run = runtime_admit(cl, state, order)
+    # admission skips schedule construction: scheduling time must shrink
+    assert run.schedule_time_s < design.schedule_time_s
+    # and throughput stays within a bounded gap of design time (paper: ~15%)
+    assert run.throughput >= 0.5 * design.throughput
+
+
+def test_runtime_adapts_to_partial_availability(compiled):
+    snn, cl, app = compiled
+    order, _ = single_tile_order(cl, DYNAP_SE)
+    state = HardwareState(DYNAP_SE)
+    state.allocated["other-app"] = [0, 1]  # two tiles already taken
+    report = runtime_admit(cl, state, order)
+    used = set(report.binding.tolist())
+    assert used <= {2, 3}
+    assert report.throughput > 0
+
+
+def test_project_order_preserves_relative_order():
+    order = [4, 2, 0, 3, 1, 5]
+    binding = np.array([0, 1, 0, 1, 0, 1])
+    per_tile = project_order(order, binding, 2)
+    assert per_tile[0] == [4, 2, 0]
+    assert per_tile[1] == [3, 1, 5]
+
+
+def test_more_tiles_scale_throughput():
+    """Paper Fig. 16: more tiles generally improve throughput.  Not strictly
+    monotone per-app (inter-tile AER traffic has a price; ImgSmooth is flat
+    in the paper too), so use a deep, moderately-active app where pipelining
+    across tiles genuinely helps, and assert with a comm-cost tolerance."""
+    from repro.core import calibrate_spikes
+    from repro.core.snn import feedforward
+
+    snn = feedforward([128] * 10, 12_000, seed=5, name="deep")
+    snn = calibrate_spikes(snn, 4.0 * snn.n_neurons, seed=6)
+    cl = partition_greedy(snn, DYNAP_SE)
+    assert cl.n_clusters >= 8
+    thrs = []
+    for n_tiles in (1, 4, 16):
+        hw = dataclasses.replace(DYNAP_SE, n_tiles=n_tiles)
+        rep = design_time_compile(cl, hw)
+        thrs.append(rep.throughput)
+    assert thrs[1] >= thrs[0] * 1.02, thrs   # 4 tiles beat 1 tile
+    assert thrs[2] >= thrs[1] * 0.95, thrs   # 16 no worse than 4

@@ -1,0 +1,90 @@
+"""End-to-end behaviour tests for the paper's system (Fig. 2 pipeline) and
+the headline claims of §7, at test scale."""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    DYNAP_SE,
+    APP_NAMES,
+    analyze_throughput,
+    bind_ours,
+    bind_pycarl,
+    bind_spinemap,
+    build_app,
+    build_static_orders,
+    cut_spikes,
+    measured_throughput,
+    partition_greedy,
+    random_orders,
+    sdfg_from_clusters,
+    small_app,
+)
+
+
+@pytest.fixture(scope="module")
+def pipeline():
+    snn = small_app(400, 5000, seed=21)
+    cl = partition_greedy(snn, DYNAP_SE)
+    app = sdfg_from_clusters(cl, hw=DYNAP_SE)
+    return snn, cl, app
+
+
+def test_full_pipeline_produces_throughput(pipeline):
+    _, cl, app = pipeline
+    rep = bind_ours(cl, DYNAP_SE)
+    orders, _ = build_static_orders(app, rep.binding, DYNAP_SE)
+    thr = analyze_throughput(app, rep.binding, DYNAP_SE, orders)
+    assert thr > 0
+
+
+def test_claim_static_order_beats_random(pipeline):
+    """§7.1: static-order scheduling improves throughput vs random order."""
+    _, cl, app = pipeline
+    rep = bind_ours(cl, DYNAP_SE)
+    static, _ = build_static_orders(app, rep.binding, DYNAP_SE)
+    thr_static = analyze_throughput(app, rep.binding, DYNAP_SE, static)
+    thr_rand = np.mean([
+        analyze_throughput(app, rep.binding, DYNAP_SE,
+                           random_orders(app, rep.binding, DYNAP_SE, seed=s))
+        for s in range(3)
+    ])
+    assert thr_static >= 0.99 * thr_rand
+
+
+def test_claim_spinemap_minimizes_cut(pipeline):
+    """SpiNeMap's objective really is lower inter-tile traffic than ours."""
+    _, cl, _ = pipeline
+    spine = bind_spinemap(cl, DYNAP_SE)
+    ours = bind_ours(cl, DYNAP_SE)
+    assert cut_spikes(cl, spine.binding) <= cut_spikes(cl, ours.binding) * 1.001
+
+
+def test_claim_ours_balances_load(pipeline):
+    """Eq. 7: our binding spreads clusters more evenly than SpiNeMap."""
+    _, cl, _ = pipeline
+    spine = bind_spinemap(cl, DYNAP_SE).clusters_per_tile(4)
+    ours = bind_ours(cl, DYNAP_SE).clusters_per_tile(4)
+    assert np.std(ours) <= np.std(spine) + 1e-9
+
+
+def test_analytic_equals_operational(pipeline):
+    """MCR of the order-augmented graph == self-timed steady-state period."""
+    _, cl, app = pipeline
+    rep = bind_ours(cl, DYNAP_SE)
+    orders, _ = build_static_orders(app, rep.binding, DYNAP_SE)
+    analytic = analyze_throughput(app, rep.binding, DYNAP_SE, orders)
+    sim = measured_throughput(app, rep.binding, DYNAP_SE, orders, iterations=30)
+    assert np.isclose(analytic, sim, rtol=0.05)
+
+
+@pytest.mark.parametrize("name", ["ImgSmooth", "MLP-MNIST", "CNN-MNIST"])
+def test_real_apps_compile(name):
+    snn = build_app(name)
+    cl = partition_greedy(snn, DYNAP_SE)
+    app = sdfg_from_clusters(cl, hw=DYNAP_SE)
+    rep = bind_ours(cl, DYNAP_SE)
+    orders, _ = build_static_orders(app, rep.binding, DYNAP_SE)
+    thr = analyze_throughput(app, rep.binding, DYNAP_SE, orders)
+    assert thr > 0
+    assert app.is_live()
