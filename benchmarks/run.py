@@ -3,6 +3,9 @@ roofline table from dry-run artifacts.  Prints CSV blocks.
 
   PYTHONPATH=src python -m benchmarks.run            # everything
   PYTHONPATH=src python -m benchmarks.run fig13      # one benchmark
+
+The design-space sweep benchmark (batched Max-Plus vs per-graph loop)
+lives in its own module:  PYTHONPATH=src python -m benchmarks.sweep
 """
 
 from __future__ import annotations

@@ -16,6 +16,7 @@ sys.path.insert(0, "src")
 
 from repro.core import (  # noqa: E402
     DYNAP_SE,
+    AdmissionError,
     HardwareState,
     build_app,
     design_time_compile,
@@ -37,11 +38,18 @@ def main():
         apps[name] = (cl, order)
         print(f"   {name}: single-tile order built in {t * 1e3:.1f} ms")
 
-    print("== t0: ImgSmooth admitted on 2 tiles")
+    print("== t0: ImgSmooth admitted on 2 tiles (best subset, batched scoring)")
     rep1 = runtime_admit(apps["ImgSmooth"][0], state, apps["ImgSmooth"][1],
                          n_tiles_request=2)
     print(f"   tiles={sorted(set(rep1.binding.tolist()))} "
           f"thr={rep1.throughput:.2e} admit={rep1.compile_time_s * 1e3:.1f} ms")
+
+    print("== t0b: a 3-tile request must be REJECTED (only 2 tiles free)")
+    try:
+        runtime_admit(apps["MLP-MNIST"][0], state, apps["MLP-MNIST"][1],
+                      n_tiles_request=3)
+    except AdmissionError as e:
+        print(f"   AdmissionError: {e}")
 
     print("== t1: MLP-MNIST arrives, admitted on the free tiles")
     t0 = time.perf_counter()

@@ -10,6 +10,17 @@ Pipeline (paper Fig. 2):
 """
 
 from .apps import APP_NAMES, APP_SPECS, all_apps, build_app, small_app
+from .explore import (
+    BINDERS,
+    SubsetScores,
+    SweepPoint,
+    SweepReport,
+    analyze_candidates,
+    build_candidates,
+    candidate_subsets,
+    score_free_tile_subsets,
+    sweep,
+)
 from .binding import (
     BindingResult,
     LoadWeights,
@@ -29,14 +40,19 @@ from .hardware import (
 )
 from .lif import LIFParams, simulate_spikes, with_simulated_spikes
 from .maxplus import (
+    EdgeStack,
     maxplus_matrix,
     mcm_power_iteration,
+    mcr_batch,
     mcr_binary_search,
     mcr_howard,
+    stack_graphs,
     throughput,
+    throughput_batch,
 )
 from .partition import Cluster, ClusteredSNN, partition_greedy
 from .runtime import (
+    AdmissionError,
     CompileReport,
     HardwareState,
     design_time_compile,
@@ -53,7 +69,15 @@ from .schedule import (
     measured_throughput,
     random_orders,
 )
-from .sdfg import SDFG, Channel, hardware_aware_sdfg, sdfg_from_clusters
+from .sdfg import (
+    SDFG,
+    Channel,
+    ChannelTable,
+    as_channel_table,
+    hardware_aware_sdfg,
+    order_edges,
+    sdfg_from_clusters,
+)
 from .snn import SNN, calibrate_spikes, feedforward
 
 __all__ = [k for k in dir() if not k.startswith("_")]

@@ -44,10 +44,7 @@ class BindingResult:
 def _cluster_loads(c: ClusteredSNN, w: LoadWeights, hw: HardwareConfig) -> np.ndarray:
     """Scalar Eq.-7 load per cluster (normalized per-resource)."""
     xbar = hw.tile.crossbar
-    conn = np.zeros(c.n_clusters)
-    for (i, j), _ in c.channel_spikes.items():
-        conn[i] += 1
-        conn[j] += 1
+    conn = c.channel_degree().astype(np.float64)
     return (
         w.crossbar * (c.inputs_used + c.neurons_used) / (xbar.inputs + xbar.outputs)
         + w.buffer * c.out_spikes / hw.tile.output_buffer
@@ -140,10 +137,7 @@ def bind_spinemap(
     rng = np.random.default_rng(rng_seed)
 
     # adjacency (symmetric spike traffic between cluster pairs)
-    pairs = list(c.channel_spikes.items())
-    src = np.array([p[0][0] for p in pairs], dtype=np.int64)
-    dst = np.array([p[0][1] for p in pairs], dtype=np.int64)
-    spk = np.array([p[1] for p in pairs])
+    src, dst, spk = c.channel_src, c.channel_dst, c.channel_rate
 
     # seed: contiguous ranges (clusters are index-ordered along layers, so
     # this already groups communicating clusters together)
@@ -183,8 +177,6 @@ def bind_spinemap(
 
 def cut_spikes(c: ClusteredSNN, binding: np.ndarray) -> float:
     """Total inter-tile spike traffic of a binding (SpiNeMap's objective)."""
-    total = 0.0
-    for (i, j), r in c.channel_spikes.items():
-        if binding[i] != binding[j]:
-            total += r
-    return total
+    binding = np.asarray(binding)
+    cut = binding[c.channel_src] != binding[c.channel_dst]
+    return float(c.channel_rate[cut].sum())

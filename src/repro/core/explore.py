@@ -1,0 +1,319 @@
+"""Design-space exploration over the array-native IR.
+
+The paper evaluates one binding per (application, hardware) pair; real
+deployments ask the opposite question — *which* crossbar size / tile count /
+binder / tile subset should this SNN get?  Answering it multiplies the
+number of hardware-aware SDFGs to analyze (SpiNeMap-style baselines double
+it again), which is exactly what the batched Max-Plus layer is for: build
+all candidate graphs, stack their edge arrays (:func:`~.maxplus.stack_graphs`),
+and bisect every candidate's maximum cycle ratio together in one
+:func:`~.maxplus.mcr_batch` call.
+
+Two entry points:
+
+  * :func:`sweep` — full factorial sweep ``apps x crossbar_sizes x
+    tile_counts x binders`` -> :class:`SweepReport` (used by
+    ``benchmarks/sweep.py`` for the paper-style comparisons).
+  * :func:`score_free_tile_subsets` — run-time admission helper: score all
+    candidate k-subsets of the currently-free tiles in one batched call
+    (used by :func:`repro.core.runtime.runtime_admit`).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import time
+from typing import Callable, Optional, Sequence, Union
+
+import numpy as np
+
+from .binding import bind_ours, bind_pycarl, bind_spinemap, cut_spikes
+from .hardware import DYNAP_SE, CrossbarConfig, HardwareConfig, TileConfig
+from .maxplus import mcr_batch, mcr_howard, stack_graphs, throughput_batch
+from .partition import ClusteredSNN, partition_greedy
+from .runtime import project_order
+from .schedule import build_static_orders
+from .sdfg import SDFG, hardware_aware_sdfg, sdfg_from_clusters
+from .snn import SNN
+
+BINDERS: dict[str, Callable] = {
+    "ours": bind_ours,
+    "pycarl": bind_pycarl,
+    "spinemap": bind_spinemap,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepPoint:
+    """One evaluated candidate configuration."""
+
+    app: str
+    crossbar: int        # crossbar inputs (= outputs; crosspoints = n^2)
+    n_tiles: int
+    binder: str
+    n_clusters: int
+    throughput: float
+    cut_spikes: float
+
+
+@dataclasses.dataclass
+class SweepReport:
+    """Result of one design-space sweep.
+
+    ``build_time_s`` covers candidate construction (partition / bind /
+    schedule / graph build); ``analysis_time_s`` is the Max-Plus evaluation
+    of all candidates — the part the batched layer accelerates.
+    """
+
+    points: list[SweepPoint]
+    build_time_s: float
+    analysis_time_s: float
+    method: str
+
+    @property
+    def n_candidates(self) -> int:
+        return len(self.points)
+
+    def best(self, app: str) -> SweepPoint:
+        mine = [p for p in self.points if p.app == app]
+        if not mine:
+            raise KeyError(f"no sweep points for app {app!r}")
+        return max(mine, key=lambda p: p.throughput)
+
+    def rows(self) -> list[tuple]:
+        out: list[tuple] = [
+            ("app", "crossbar", "tiles", "binder", "clusters",
+             "throughput", "cut_spikes")
+        ]
+        for p in self.points:
+            out.append((
+                p.app, p.crossbar, p.n_tiles, p.binder, p.n_clusters,
+                f"{p.throughput:.6e}", f"{p.cut_spikes:.1f}",
+            ))
+        return out
+
+
+def _hw_for(base: HardwareConfig, crossbar: int, n_tiles: int) -> HardwareConfig:
+    tile = dataclasses.replace(
+        base.tile,
+        crossbar=CrossbarConfig(crossbar, crossbar, crossbar * crossbar),
+    )
+    return dataclasses.replace(base, n_tiles=n_tiles, tile=tile)
+
+
+def build_candidates(
+    apps: Sequence[Union[str, SNN]],
+    *,
+    crossbar_sizes: Sequence[int] = (128,),
+    tile_counts: Sequence[int] = (4,),
+    binders: Sequence[str] = ("ours",),
+    hw_base: HardwareConfig = DYNAP_SE,
+    with_orders: bool = True,
+    sim_iterations: int = 12,
+) -> tuple[list[SweepPoint], list[SDFG], float]:
+    """Construct every candidate's hardware-aware SDFG for a factorial sweep.
+
+    ``apps`` mixes Table-1 app names and prebuilt :class:`SNN` objects.
+    Partitioning (Alg. 1) runs once per (app, crossbar); binding and static
+    orders per candidate.  Returns ``(points, graphs, build_time_s)`` with
+    throughputs still zero — analysis is a separate (batchable) step.
+    """
+    from .apps import build_app
+
+    t_build0 = time.perf_counter()
+    snns: list[SNN] = [
+        build_app(a) if isinstance(a, str) else a for a in apps
+    ]
+
+    clustered: dict[tuple[str, int], ClusteredSNN] = {}
+    metas: list[SweepPoint] = []
+    graphs: list[SDFG] = []
+    for snn, xb in itertools.product(snns, crossbar_sizes):
+        key = (snn.name, xb)
+        if key not in clustered:
+            clustered[key] = partition_greedy(snn, _hw_for(hw_base, xb, 1))
+    for snn, xb, n_tiles, binder in itertools.product(
+        snns, crossbar_sizes, tile_counts, binders
+    ):
+        cl = clustered[(snn.name, xb)]
+        hw = _hw_for(hw_base, xb, n_tiles)
+        app_g = sdfg_from_clusters(cl, hw=hw)
+        bres = BINDERS[binder](cl, hw)
+        orders = None
+        if with_orders:
+            orders, _ = build_static_orders(
+                app_g, bres.binding, hw, iterations=sim_iterations
+            )
+        graphs.append(hardware_aware_sdfg(app_g, bres.binding, hw, orders))
+        metas.append(SweepPoint(
+            app=snn.name,
+            crossbar=xb,
+            n_tiles=n_tiles,
+            binder=binder,
+            n_clusters=cl.n_clusters,
+            throughput=0.0,
+            cut_spikes=cut_spikes(cl, bres.binding),
+        ))
+    return metas, graphs, time.perf_counter() - t_build0
+
+
+def analyze_candidates(
+    graphs: Sequence[SDFG],
+    *,
+    method: str = "batched",
+    backend: str = "auto",
+    rel_tol: float = 1e-8,
+) -> np.ndarray:
+    """Throughput of every candidate graph.
+
+    ``method``: ``"batched"`` (default, one :func:`mcr_batch` call over the
+    stacked edge arrays) or ``"howard-loop"`` / ``"binary-loop"`` — the
+    per-graph Python loops, kept as the benchmark baselines the batched
+    layer is measured against.
+    """
+    from .maxplus import mcr_binary_search
+
+    if method == "batched":
+        return throughput_batch(graphs, backend=backend, rel_tol=rel_tol)
+    if method in ("howard-loop", "binary-loop"):
+        fn = mcr_howard if method == "howard-loop" else mcr_binary_search
+        rhos = np.array([fn(g) for g in graphs])
+        return np.where(
+            np.isfinite(rhos) & (rhos > 0), 1.0 / np.maximum(rhos, 1e-300), 0.0
+        )
+    raise ValueError(f"unknown sweep method {method!r}")
+
+
+def sweep(
+    apps: Sequence[Union[str, SNN]],
+    *,
+    crossbar_sizes: Sequence[int] = (128,),
+    tile_counts: Sequence[int] = (4,),
+    binders: Sequence[str] = ("ours",),
+    hw_base: HardwareConfig = DYNAP_SE,
+    with_orders: bool = True,
+    sim_iterations: int = 12,
+    method: str = "batched",
+    backend: str = "auto",
+    rel_tol: float = 1e-8,
+) -> SweepReport:
+    """Factorial design-space sweep, analyzed in one batched Max-Plus call.
+
+    Composition of :func:`build_candidates` and :func:`analyze_candidates`;
+    see those for the knobs.
+    """
+    metas, graphs, build_time = build_candidates(
+        apps,
+        crossbar_sizes=crossbar_sizes,
+        tile_counts=tile_counts,
+        binders=binders,
+        hw_base=hw_base,
+        with_orders=with_orders,
+        sim_iterations=sim_iterations,
+    )
+    t_an0 = time.perf_counter()
+    thrs = analyze_candidates(
+        graphs, method=method, backend=backend, rel_tol=rel_tol
+    )
+    analysis_time = time.perf_counter() - t_an0
+
+    points = [
+        dataclasses.replace(p, throughput=float(t)) for p, t in zip(metas, thrs)
+    ]
+    return SweepReport(
+        points=points,
+        build_time_s=build_time,
+        analysis_time_s=analysis_time,
+        method=method,
+    )
+
+
+# ======================================================================
+# run-time admission: batched scoring of candidate free-tile subsets
+# ======================================================================
+def candidate_subsets(
+    free: Sequence[int], k: int, *, max_candidates: int = 64, seed: int = 0
+) -> list[tuple[int, ...]]:
+    """k-subsets of the free tiles to score (exhaustive when small).
+
+    Falls back to contiguous windows plus random samples when the binomial
+    count explodes — admission must stay fast (§5, Table 3).
+    """
+    free = list(free)
+    from math import comb
+
+    if comb(len(free), k) <= max_candidates:
+        return list(itertools.combinations(free, k))
+    subsets: dict[tuple[int, ...], None] = {}
+    for i in range(len(free) - k + 1):           # contiguous = few NoC hops
+        subsets[tuple(free[i : i + k])] = None
+    rng = np.random.default_rng(seed)
+    while len(subsets) < max_candidates:
+        pick = tuple(sorted(rng.choice(len(free), size=k, replace=False)))
+        subsets[tuple(free[i] for i in pick)] = None
+    return list(subsets)
+
+
+@dataclasses.dataclass
+class SubsetScores:
+    """Batched scoring of candidate tile subsets (admission helper).
+
+    ``binding``/``virt_orders`` are the *virtual* (k-tile) binding and the
+    Lemma-1 projected per-tile orders — computed once, reusable by the
+    caller so admission doesn't bind or project twice.
+    """
+
+    subsets: list[tuple[int, ...]]
+    throughputs: np.ndarray
+    binding: np.ndarray              # (n_clusters,) virtual tile ids in [0, k)
+    virt_orders: list[list[int]]
+
+    @property
+    def best(self) -> tuple[int, ...]:
+        return self.subsets[int(np.argmax(self.throughputs))]
+
+
+def score_free_tile_subsets(
+    clustered: ClusteredSNN,
+    hw: HardwareConfig,
+    free: Sequence[int],
+    k: int,
+    single_order: Sequence[int],
+    *,
+    binder: Callable = bind_ours,
+    binder_kwargs: Optional[dict] = None,
+    max_candidates: int = 64,
+    backend: str = "auto",
+) -> SubsetScores:
+    """Score every candidate k-subset of the free tiles in ONE batched call.
+
+    The virtual binding and the Lemma-1 projected per-tile orders depend
+    only on ``k``, so they are computed once; candidates differ in which
+    physical tiles the virtual tiles land on — i.e. purely in NoC delays —
+    which is exactly a stack of edge-weight arrays over a shared topology.
+    """
+    subsets = candidate_subsets(free, k, max_candidates=max_candidates)
+    sub_hw = dataclasses.replace(hw, n_tiles=k)
+    kwargs = binder_kwargs or {}
+    try:
+        bres = binder(clustered, sub_hw, **kwargs)
+    except TypeError:  # binders without the kwargs (spinemap)
+        bres = binder(clustered, sub_hw)
+    virt_orders = project_order(list(single_order), bres.binding, k)
+
+    app_g = sdfg_from_clusters(clustered, hw=hw)
+    graphs = []
+    for subset in subsets:
+        phys_binding = np.array([subset[t] for t in bres.binding], dtype=np.int64)
+        phys_orders: list[list[int]] = [[] for _ in range(hw.n_tiles)]
+        for virt, phys in enumerate(subset):
+            phys_orders[phys] = virt_orders[virt]
+        graphs.append(hardware_aware_sdfg(app_g, phys_binding, hw, phys_orders))
+    thrs = throughput_batch(graphs, backend=backend)
+    return SubsetScores(
+        subsets=subsets,
+        throughputs=thrs,
+        binding=bres.binding,
+        virt_orders=virt_orders,
+    )

@@ -21,6 +21,8 @@ from __future__ import annotations
 import dataclasses
 import math
 
+import numpy as np
+
 
 @dataclasses.dataclass(frozen=True)
 class CrossbarConfig:
@@ -92,6 +94,29 @@ class HardwareConfig:
             + n_spikes * (self.t_spike_encode + self.t_spike_link)
             + (hops - 1) * self.t_spike_link
         )
+
+    def hops_array(self, src_tiles: np.ndarray, dst_tiles: np.ndarray) -> np.ndarray:
+        """Vectorized Manhattan hop counts (same-tile pairs report 0)."""
+        d = self.mesh_dim
+        src_tiles = np.asarray(src_tiles, dtype=np.int64)
+        dst_tiles = np.asarray(dst_tiles, dtype=np.int64)
+        return np.abs(src_tiles % d - dst_tiles % d) + np.abs(
+            src_tiles // d - dst_tiles // d
+        )
+
+    def comm_delay_array(
+        self, n_spikes: np.ndarray, src_tiles: np.ndarray, dst_tiles: np.ndarray
+    ) -> np.ndarray:
+        """Vectorized :meth:`comm_delay` over parallel channel arrays."""
+        src_tiles = np.asarray(src_tiles, dtype=np.int64)
+        dst_tiles = np.asarray(dst_tiles, dtype=np.int64)
+        hops = self.hops_array(src_tiles, dst_tiles)
+        delay = (
+            self.t_route
+            + np.asarray(n_spikes) * (self.t_spike_encode + self.t_spike_link)
+            + (hops - 1) * self.t_spike_link
+        )
+        return np.where(src_tiles == dst_tiles, 0.0, delay)
 
 
 # The three hardware models evaluated in the paper (§6.1, Fig. 16).

@@ -6,19 +6,33 @@ edge weights ``w = tau[dst] + delay`` this is the *maximum cycle ratio*
 
     rho_max = max over cycles C of  sum_{e in C} w(e) / sum_{e in C} m(e).
 
-Three independent evaluators are provided (cross-validated in tests):
+Per-graph evaluators (cross-validated in tests):
 
   * :func:`mcr_howard`      — Howard's policy iteration (exact, fast; default)
   * :func:`mcr_binary_search` — lambda-search + vectorized Bellman-Ford
   * :func:`mcm_power_iteration` — t_k = T (x) t_{k-1} on the explicit max-plus
     matrix ``T = A0* (x) A1`` (Eq. 4), executed with the Pallas
     ``maxplus_matmul`` kernel (VPU semiring matmul; jnp oracle on CPU).
+
+Batched evaluator (the design-space-exploration hot path):
+
+  * :func:`mcr_batch` — lambda-search + Bellman-Ford over an
+    :class:`EdgeStack`, a *stack* of edge-weight arrays (one row per
+    candidate binding / hardware config / static order).  The whole stack
+    bisects together: every Bellman-Ford relaxation touches all candidates
+    in one segment-max over flat arrays, so interpreter overhead is paid
+    once per sweep instead of once per candidate per sweep.  Two backends:
+    ``"edges"`` (float64 numpy segment-max — exact, the CPU default) and
+    ``"dense"`` (max-plus matrix squaring through the Pallas
+    ``maxplus_bmm`` semiring kernel on TPU / jnp oracle elsewhere —
+    float32, looser tolerance, wins at large batch x actor counts).
 """
 
 from __future__ import annotations
 
+import dataclasses
 import math
-from typing import Optional
+from typing import Optional, Sequence
 
 import numpy as np
 
@@ -258,7 +272,6 @@ def mcm_power_iteration(
             return float(mx)
         if k == warm:
             x0_at_warm = mx
-        x = x - 0.0  # keep absolute times; bounded by renorm below
         if mx > 1e12:
             x -= mx
             if x0_at_warm is not None:
@@ -266,6 +279,284 @@ def mcm_power_iteration(
     if x0_at_warm is None:  # pragma: no cover
         return float("nan")
     return float((x.max() - x0_at_warm) / (iters - 1 - warm))
+
+
+# ======================================================================
+# Batched analysis: lambda-search over a stack of edge-weight arrays
+# ======================================================================
+@dataclasses.dataclass(frozen=True)
+class EdgeStack:
+    """A batch of timed event graphs as parallel edge arrays.
+
+    Row ``b`` is one candidate graph (a binding / hardware config / static
+    order under evaluation).  All rows share the padded edge count ``E`` and
+    actor count ``n_actors``; padding slots carry ``weights = -inf``, which
+    is the (max,+) neutral element, so they never influence any longest
+    path.  Markings may differ per row (buffer sizes are a design axis).
+    """
+
+    n_actors: int
+    src: np.ndarray       # (B, E) int64
+    dst: np.ndarray       # (B, E) int64
+    tokens: np.ndarray    # (B, E) int64
+    weights: np.ndarray   # (B, E) float64; -inf marks an inactive slot
+
+    @property
+    def n_graphs(self) -> int:
+        return int(self.weights.shape[0])
+
+    @property
+    def n_edges(self) -> int:
+        return int(self.weights.shape[1])
+
+
+def stack_graphs(graphs: Sequence[SDFG]) -> EdgeStack:
+    """Pack per-graph edge arrays into one padded :class:`EdgeStack`.
+
+    Graphs may have different topologies and actor counts; rows are padded
+    to the maximum edge count with -inf-weight slots and to the maximum
+    actor count (extra actors are isolated, so they cannot join a cycle).
+    """
+    assert graphs, "need at least one graph"
+    b = len(graphs)
+    n = max(g.n_actors for g in graphs)
+    e = max(g.n_channels for g in graphs)
+    src = np.zeros((b, e), dtype=np.int64)
+    dst = np.zeros((b, e), dtype=np.int64)
+    tokens = np.ones((b, e), dtype=np.int64)
+    weights = np.full((b, e), NEG_INF)
+    for i, g in enumerate(graphs):
+        s, d, w, m = g.edges_arrays()
+        k = s.size
+        src[i, :k] = s
+        dst[i, :k] = d
+        weights[i, :k] = w
+        tokens[i, :k] = m
+    return EdgeStack(n_actors=n, src=src, dst=dst, tokens=tokens, weights=weights)
+
+
+def _positive_cycle_masks(
+    stack: EdgeStack,
+    lam: np.ndarray,
+    flat_src: np.ndarray,
+    order: np.ndarray,
+    uniq_keys: np.ndarray,
+    seg_starts: np.ndarray,
+    upper: np.ndarray,
+    active: Optional[np.ndarray] = None,
+    *,
+    atol: float = 1e-12,
+) -> np.ndarray:
+    """Per-row: does weights - lam*tokens contain a positive cycle?
+
+    One vectorized longest-path Bellman-Ford over the whole batch.  A row
+    resolves early when a relaxation round changes nothing (no positive
+    cycle) or when any distance exceeds the row's maximum simple-path
+    weight (positive cycle — only a cycle can pump past it).  Rows outside
+    ``active`` start resolved: their probe point sits at (or below) the
+    true cycle ratio, where relaxation may never settle, and their answer
+    is discarded by the caller anyway — without this, one slow row would
+    drag every later bisection step to the full n+1 rounds.
+    """
+    b, n = stack.n_graphs, stack.n_actors
+    ww = (stack.weights - lam[:, None] * stack.tokens).ravel()
+    dist = np.zeros(b * n)
+    positive = np.zeros(b, dtype=bool)
+    resolved = np.zeros(b, dtype=bool) if active is None else ~active
+    for _ in range(n + 1):
+        cand = dist[flat_src] + ww
+        seg_max = np.maximum.reduceat(cand[order], seg_starts)
+        new = dist.copy()
+        new[uniq_keys] = np.maximum(dist[uniq_keys], seg_max)
+        row_changed = ((new - dist) > atol).reshape(b, n).any(axis=1)
+        resolved |= ~row_changed
+        over = (new.reshape(b, n) > upper[:, None] + 1.0).any(axis=1) & ~resolved
+        positive |= over
+        resolved |= over
+        dist = new
+        if resolved.all():
+            break
+    # rows still improving after n+1 rounds must contain a positive cycle
+    positive |= ~resolved
+    return positive
+
+
+def mcr_batch(
+    stack: EdgeStack,
+    *,
+    rel_tol: float = 1e-8,
+    max_steps: int = 80,
+    backend: str = "auto",
+) -> np.ndarray:
+    """Maximum cycle ratio for every row of an :class:`EdgeStack`.
+
+    Lambda-search: a positive cycle in ``weights - lam*tokens`` exists iff
+    ``lam < rho_max`` — all rows bisect together.  Inputs must be live
+    graphs (a zero-token cycle drives the result to the upper bound instead
+    of ``inf``); every graph built by this pipeline is live by construction.
+
+    ``backend``: ``"edges"`` (numpy float64, exact — default off-TPU),
+    ``"dense"`` (Pallas/jnp max-plus matrix squaring, float32), or
+    ``"auto"``.
+    """
+    if backend == "auto":
+        backend = "dense" if _on_tpu() else "edges"
+    if backend == "dense":
+        # float32 squaring can't resolve below ~1e-4 relative; honor a
+        # caller-requested looser tolerance but clamp tighter requests
+        return _mcr_batch_dense(
+            stack, max_steps=max_steps, rel_tol=max(rel_tol, 1e-4)
+        )
+    assert backend == "edges", backend
+
+    b, n, e = stack.n_graphs, stack.n_actors, stack.n_edges
+    if e == 0:
+        return np.full(b, NEG_INF)
+    finite = np.isfinite(stack.weights)
+    wpos = np.where(finite & (stack.weights > 0), stack.weights, 0.0)
+    upper = wpos.sum(axis=1)
+    hi = upper + 1.0
+
+    # every actor's one-token self-edge is itself a cycle: a safe lower bound
+    self_loop = finite & (stack.src == stack.dst) & (stack.tokens > 0)
+    ratio = np.where(self_loop, stack.weights / np.maximum(stack.tokens, 1), NEG_INF)
+    lo = np.maximum(ratio.max(axis=1, initial=NEG_INF), 0.0)
+    has_cycle = ratio.max(axis=1, initial=NEG_INF) > NEG_INF
+
+    # flat batched CSR over (row, dst): segment-max targets, computed once
+    rows = np.arange(b, dtype=np.int64)[:, None]
+    flat_src = (rows * n + stack.src).ravel()
+    flat_dst = (rows * n + stack.dst).ravel()
+    order = np.argsort(flat_dst, kind="stable")
+    uniq_keys, seg_starts = np.unique(flat_dst[order], return_index=True)
+
+    for _ in range(max_steps):
+        tol = rel_tol * np.maximum(1.0, np.abs(hi))
+        active = (hi - lo) > tol
+        if not active.any():
+            break
+        mid = np.where(active, 0.5 * (lo + hi), lo)
+        pos = _positive_cycle_masks(
+            stack, mid, flat_src, order, uniq_keys, seg_starts, upper, active
+        )
+        has_cycle |= active & pos
+        lo = np.where(active & pos, mid, lo)
+        hi = np.where(active & ~pos, mid, hi)
+    # rows that never showed a positive cycle at any probed lambda (and have
+    # no self-loop cycle) are acyclic: no cycle bounds their throughput
+    return np.where(has_cycle, 0.5 * (lo + hi), NEG_INF)
+
+
+def _on_tpu() -> bool:
+    # lazy: keep repro.core importable without pulling jax in at load time
+    try:
+        from repro.kernels.ops import _on_tpu as kernels_on_tpu
+
+        return kernels_on_tpu()
+    except Exception:  # pragma: no cover - jax is a hard dep in practice
+        return False
+
+
+def _mcr_batch_dense(
+    stack: EdgeStack, *, max_steps: int = 60, rel_tol: float = 1e-4
+) -> np.ndarray:
+    """Dense-kernel lambda-search: positive-cycle detection by max-plus
+    matrix squaring through :func:`repro.kernels.ops.maxplus_bmm`.
+
+    ``W[b, i, j] = max over edges j->i of (w - lam*m)`` with a 0 diagonal
+    (the (max,+) identity is folded in), so ``W^(2^k)`` holds longest paths
+    of length <= 2^k.  With ``2^k >= n_actors`` the paths saturate unless a
+    positive cycle keeps pumping — one extra relaxation detects growth.
+    float32 on the kernel path, so tolerances are looser than ``"edges"``.
+    """
+    from repro.kernels import ops as kops
+
+    b, n = stack.n_graphs, stack.n_actors
+    finite = np.isfinite(stack.weights)
+    wpos = np.where(finite & (stack.weights > 0), stack.weights, 0.0)
+    upper = wpos.sum(axis=1)
+    hi = upper + 1.0
+    self_loop = finite & (stack.src == stack.dst) & (stack.tokens > 0)
+    ratio = np.where(self_loop, stack.weights / np.maximum(stack.tokens, 1), NEG_INF)
+    lo = np.maximum(ratio.max(axis=1, initial=NEG_INF), 0.0)
+    has_cycle = ratio.max(axis=1, initial=NEG_INF) > NEG_INF
+
+    rows = np.arange(b, dtype=np.int64)[:, None]
+    flat = (rows * n * n + stack.dst * n + stack.src).ravel()
+    order = np.argsort(flat, kind="stable")
+    uniq_keys, seg_starts = np.unique(flat[order], return_index=True)
+    diag = np.arange(n)
+    n_sq = max(1, int(math.ceil(math.log2(max(n, 2)))))
+
+    for _ in range(max_steps):
+        tol = rel_tol * np.maximum(1.0, np.abs(hi))
+        active = (hi - lo) > tol
+        if not active.any():
+            break
+        mid = np.where(active, 0.5 * (lo + hi), lo)
+        ww = (stack.weights - mid[:, None] * stack.tokens).ravel()
+        w_dense = np.full(b * n * n, NEG_INF, dtype=np.float32)
+        w_dense[uniq_keys] = np.maximum.reduceat(
+            ww[order].astype(np.float32), seg_starts
+        )
+        w_dense = w_dense.reshape(b, n, n)
+        w_dense[:, diag, diag] = np.maximum(w_dense[:, diag, diag], 0.0)
+
+        m_pow = w_dense
+        for _ in range(n_sq):
+            m_pow = np.asarray(kops.maxplus_bmm(m_pow, m_pow))
+        dist = m_pow.max(axis=2)                       # paths from 0-vector
+        dist1 = (w_dense + dist[:, None, :]).max(axis=2)
+        growth = np.maximum(1.0, np.abs(dist)) * 1e-4
+        pos = np.logical_or.reduce(dist1 > dist + growth, axis=1)
+        has_cycle |= active & pos
+        lo = np.where(active & pos, mid, lo)
+        hi = np.where(active & ~pos, mid, hi)
+    # rows that never showed a positive cycle at any probed lambda (and have
+    # no self-loop cycle) are acyclic — same convention as the edges backend
+    return np.where(has_cycle, 0.5 * (lo + hi), NEG_INF).astype(np.float64)
+
+
+def throughput_batch(
+    graphs: Sequence[SDFG],
+    *,
+    backend: str = "auto",
+    rel_tol: float = 1e-8,
+    group_factor: float = 1.5,
+) -> np.ndarray:
+    """Per-graph throughput (1/MCR) for a batch of graphs.
+
+    Rows of an :class:`EdgeStack` all pay the padded maximum edge and actor
+    count, so stacking a 20-actor graph with a 700-actor one wastes most of
+    the sweep.  Graphs are therefore grouped into similar-size sub-stacks
+    (within ``group_factor`` in both actors and edges) and each group is
+    analyzed in one :func:`mcr_batch` call; a homogeneous batch (the common
+    sweep/admission shape) stays a single call.
+    """
+    order = sorted(
+        range(len(graphs)), key=lambda i: (graphs[i].n_actors, graphs[i].n_channels)
+    )
+    groups: list[list[int]] = []
+    for i in order:
+        if groups:
+            anchor = graphs[groups[-1][0]]
+            g = graphs[i]
+            if (
+                g.n_actors <= group_factor * max(anchor.n_actors, 1)
+                and g.n_channels <= group_factor * max(anchor.n_channels, 1)
+            ):
+                groups[-1].append(i)
+                continue
+        groups.append([i])
+
+    out = np.zeros(len(graphs))
+    for grp in groups:
+        rho = mcr_batch(
+            stack_graphs([graphs[i] for i in grp]), backend=backend, rel_tol=rel_tol
+        )
+        ok = np.isfinite(rho) & (rho > 0)
+        out[np.asarray(grp)[ok]] = 1.0 / rho[ok]
+    return out
 
 
 # ======================================================================

@@ -45,13 +45,22 @@ class Cluster:
 
 @dataclasses.dataclass
 class ClusteredSNN:
-    """Result of Algorithm 1."""
+    """Result of Algorithm 1.
+
+    Inter-cluster channels are stored as parallel arrays sorted by
+    ``(src, dst)`` — the array-native IR consumed directly by the SDFG and
+    binding layers.  ``channel_spikes`` remains available as a lazily-built
+    dict view for incremental call sites and tests.
+    """
 
     snn: SNN
     cluster_of: np.ndarray            # (n_neurons,) int32
     n_clusters: int
-    # channel i->j spike rate per application iteration (CSR-ish dict)
-    channel_spikes: dict[tuple[int, int], float]
+    # channel i->j spike rate per application iteration (parallel arrays,
+    # sorted by (src, dst); one entry per directed cluster pair with traffic)
+    channel_src: np.ndarray           # (n_channels,) int64
+    channel_dst: np.ndarray           # (n_channels,) int64
+    channel_rate: np.ndarray          # (n_channels,) float64
     # per-cluster stats
     inputs_used: np.ndarray           # (n_clusters,)
     neurons_used: np.ndarray
@@ -62,7 +71,21 @@ class ClusteredSNN:
 
     @property
     def n_channels(self) -> int:
-        return len(self.channel_spikes)
+        return int(self.channel_src.size)
+
+    @property
+    def channel_spikes(self) -> dict[tuple[int, int], float]:
+        """Compat dict view of the channel arrays (built on demand)."""
+        return {
+            (int(i), int(j)): float(r)
+            for i, j, r in zip(self.channel_src, self.channel_dst, self.channel_rate)
+        }
+
+    def channel_degree(self) -> np.ndarray:
+        """Per-cluster count of incident channels (in + out)."""
+        return np.bincount(
+            self.channel_src, minlength=self.n_clusters
+        ) + np.bincount(self.channel_dst, minlength=self.n_clusters)
 
     def utilization(self, xbar: CrossbarConfig) -> dict[str, float]:
         io = (self.inputs_used + self.neurons_used) / (xbar.inputs + xbar.outputs)
@@ -72,8 +95,11 @@ class ClusteredSNN:
         }
 
 
-def _channel_matrix(snn: SNN, cluster_of: np.ndarray) -> dict[tuple[int, int], float]:
-    """AER spike traffic between cluster pairs.
+def _channel_arrays(
+    snn: SNN, cluster_of: np.ndarray
+) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """AER spike traffic between cluster pairs, as (src, dst, rate) arrays
+    sorted by (src, dst).
 
     The NoC multicasts ONE packet per source-neuron spike per destination
     cluster (the destination crossbar fans it out to all target synapses
@@ -83,8 +109,9 @@ def _channel_matrix(snn: SNN, cluster_of: np.ndarray) -> dict[tuple[int, int], f
     src = cluster_of[snn.pre]
     dst = cluster_of[snn.post]
     cut = src != dst
+    empty = np.array([], dtype=np.int64)
     if not np.any(cut):
-        return {}
+        return empty, empty, np.array([], dtype=np.float64)
     n = int(cluster_of.max() + 1)
     # dedupe (pre neuron, dst cluster): one packet per spike per dst cluster
     pair_key = snn.pre[cut].astype(np.int64) * n + dst[cut]
@@ -95,9 +122,8 @@ def _channel_matrix(snn: SNN, cluster_of: np.ndarray) -> dict[tuple[int, int], f
     chan_key = src_c * n + dst_c
     uniq, inv = np.unique(chan_key, return_inverse=True)
     sums = np.bincount(inv, weights=snn.spikes[pre_n])
-    return {
-        (int(k // n), int(k % n)): float(s) for k, s in zip(uniq, sums)
-    }
+    # np.unique returns sorted keys -> arrays are (src, dst)-sorted already
+    return (uniq // n).astype(np.int64), (uniq % n).astype(np.int64), sums
 
 
 def partition_greedy(
@@ -147,6 +173,7 @@ def partition_greedy(
     clusters: list[Cluster] = []
     by_util: list[Cluster] = []  # maintained descending by utilization
     cluster_of = np.full(work.n_neurons, -1, dtype=np.int32)
+    merges = 0
 
     for n in neuron_order:
         syn_idx = order[starts[n] : ends[n]]
@@ -194,27 +221,27 @@ def partition_greedy(
         placed.out_spikes += out_rate
         cluster_of[n] = placed.index
         # line 11: keep clusters utilization-descending (single float key —
-        # cheap enough to re-sort lazily every few hundred merges).
-        if len(by_util) > 1 and (int(n) % 128 == 0):
+        # cheap enough to re-sort lazily every 128 merges; counting merges
+        # gives a fixed cadence regardless of which neuron ids are visited).
+        merges += 1
+        if len(by_util) > 1 and merges % 128 == 0:
             by_util.sort(key=lambda c: -c.utilization(xbar))
 
     assert np.all(cluster_of >= 0)
 
     # line 13: consistency / connectivity / deadlock-freedom checks
-    channel_spikes = _channel_matrix(work, cluster_of)
+    ch_src, ch_dst, ch_rate = _channel_arrays(work, cluster_of)
     n_clusters = len(clusters)
 
-    in_spikes = np.zeros(n_clusters)
-    out_spikes = np.zeros(n_clusters)
-    for (i, j), r in channel_spikes.items():
-        out_spikes[i] += r
-        in_spikes[j] += r
+    in_spikes = np.bincount(ch_dst, weights=ch_rate, minlength=n_clusters)
 
     result = ClusteredSNN(
         snn=work,
         cluster_of=cluster_of,
         n_clusters=n_clusters,
-        channel_spikes=channel_spikes,
+        channel_src=ch_src,
+        channel_dst=ch_dst,
+        channel_rate=ch_rate,
         inputs_used=np.array([c.n_inputs for c in clusters]),
         neurons_used=np.array([len(c.neurons) for c in clusters]),
         synapses_used=np.array([c.n_synapses for c in clusters]),

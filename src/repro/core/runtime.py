@@ -114,6 +114,10 @@ def project_order(
 # ======================================================================
 # run-time admission (§5, Fig. 11)
 # ======================================================================
+class AdmissionError(RuntimeError):
+    """Raised when an application cannot be admitted on the free tiles."""
+
+
 @dataclasses.dataclass
 class HardwareState:
     """Tracks which tiles are currently allocated to running applications."""
@@ -136,33 +140,74 @@ def runtime_admit(
     *,
     n_tiles_request: Optional[int] = None,
     weights: LoadWeights = LoadWeights(),
+    tile_selection: str = "batched",
 ) -> CompileReport:
     """Admit an application onto the currently-free tiles (Fig. 11).
 
     Binding runs on the free-tile subset; per-tile schedules are *projected*
     from the design-time single-tile order (no construction from scratch).
+
+    When ``n_tiles_request`` asks for fewer tiles than are free, the
+    candidate k-subsets of the free tiles are scored in one batched
+    Max-Plus call (``tile_selection="batched"``, via
+    :func:`repro.core.explore.score_free_tile_subsets`) and the
+    best-throughput subset wins; ``tile_selection="first"`` keeps the old
+    first-k-free behaviour.  Requesting more tiles than are free raises
+    :class:`AdmissionError` instead of silently binding to fewer.
     """
     free = state.free_tiles()
     if not free:
-        raise RuntimeError("no free tiles: admission rejected")
+        raise AdmissionError(
+            f"admission rejected for {clustered.snn.name!r}: no free tiles "
+            f"({state.hw.n_tiles} total, all allocated)"
+        )
     if n_tiles_request is not None:
-        free = free[:n_tiles_request]
+        if n_tiles_request < 1:
+            raise ValueError(f"n_tiles_request must be >= 1, got {n_tiles_request}")
+        if len(free) < n_tiles_request:
+            raise AdmissionError(
+                f"admission rejected for {clustered.snn.name!r}: requested "
+                f"{n_tiles_request} tiles but only {len(free)} free "
+                f"(free tiles: {free})"
+            )
 
     t0 = time.perf_counter()
-    # bind on a virtual hardware with |free| tiles, then relabel to real ids
-    sub_hw = dataclasses.replace(state.hw, n_tiles=len(free))
-    bres = bind_ours(clustered, sub_hw, weights=weights)
+    scores = None
+    if n_tiles_request is not None and n_tiles_request < len(free):
+        if tile_selection == "batched":
+            from .explore import score_free_tile_subsets
+
+            scores = score_free_tile_subsets(
+                clustered, state.hw, free, n_tiles_request, single_order,
+                binder_kwargs={"weights": weights},
+            )
+            free = list(scores.best)
+        elif tile_selection == "first":
+            free = free[:n_tiles_request]
+        else:
+            raise ValueError(f"unknown tile_selection {tile_selection!r}")
+
+    # bind on a virtual hardware with |free| tiles, then relabel to real
+    # ids; subset scoring already bound and projected — reuse its result
+    if scores is not None:
+        virt_binding = scores.binding
+    else:
+        sub_hw = dataclasses.replace(state.hw, n_tiles=len(free))
+        virt_binding = bind_ours(clustered, sub_hw, weights=weights).binding
     t_bind = time.perf_counter() - t0
 
     t1 = time.perf_counter()
-    sub_orders = project_order(single_order, bres.binding, len(free))
-    t_sched = time.perf_counter() - t1
+    if scores is not None:
+        sub_orders = scores.virt_orders
+    else:
+        sub_orders = project_order(single_order, virt_binding, len(free))
 
     # relabel virtual tiles -> physical free tiles
-    phys_binding = np.array([free[t] for t in bres.binding], dtype=np.int64)
+    phys_binding = np.array([free[t] for t in virt_binding], dtype=np.int64)
     phys_orders: list[list[int]] = [[] for _ in range(state.hw.n_tiles)]
     for virt, phys in enumerate(free):
         phys_orders[phys] = sub_orders[virt]
+    t_sched = time.perf_counter() - t1
 
     app = sdfg_from_clusters(clustered, hw=state.hw)
     thr = analyze_throughput(app, phys_binding, state.hw, phys_orders)

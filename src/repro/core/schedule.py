@@ -103,14 +103,18 @@ class SelfTimedExecutor:
         binding = self.binding
         n_tiles = self.hw.n_tiles
 
-        in_edges: list[list[int]] = [[] for _ in range(n)]
-        out_edges: list[list[int]] = [[] for _ in range(n)]
-        for e, ch in enumerate(g.channels):
-            in_edges[ch.dst].append(e)
-            out_edges[ch.src].append(e)
-        edge_dst = np.array([ch.dst for ch in g.channels], dtype=np.int64)
-        tokens = np.array([ch.tokens for ch in g.channels], dtype=np.int64)
-        delay = np.array([ch.delay for ch in g.channels])
+        table = g.table
+        edge_dst = table.dst
+        tokens = table.tokens.copy()
+        delay = table.delay
+        d_order, d_starts, d_ends = table.csr_by("dst", n)
+        s_order, s_starts, s_ends = table.csr_by("src", n)
+        in_edges = [
+            d_order[d_starts[a] : d_ends[a]].tolist() for a in range(n)
+        ]
+        out_edges = [
+            s_order[s_starts[a] : s_ends[a]].tolist() for a in range(n)
+        ]
         tau = g.exec_time
 
         deficit = np.zeros(n, dtype=np.int64)

@@ -92,3 +92,76 @@ def maxplus_matmul(
         scratch_shapes=[pltpu.VMEM((bm, bn), a.dtype)],
         interpret=interpret,
     )(a, b)
+
+
+# ----------------------------------------------------------------------
+# batched variant: one grid dimension per candidate graph in the stack
+# ----------------------------------------------------------------------
+def _maxplus_bmm_kernel(a_ref, b_ref, out_ref, acc_ref, *, n_k: int, unroll_k: int):
+    """One (bm, bn) output block of one batch element; K is grid dim 3."""
+    k = pl.program_id(3)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.full_like(acc_ref[...], NEG)
+
+    a = a_ref[0]  # (bm, bk)
+    b = b_ref[0]  # (bk, bn)
+    bk = a.shape[1]
+
+    def body(c, acc):
+        a_c = jax.lax.dynamic_slice_in_dim(a, c * unroll_k, unroll_k, axis=1)
+        b_c = jax.lax.dynamic_slice_in_dim(b, c * unroll_k, unroll_k, axis=0)
+        part = jnp.max(a_c[:, :, None] + b_c[None, :, :], axis=1)
+        return jnp.maximum(acc, part)
+
+    acc = jax.lax.fori_loop(0, bk // unroll_k, body, acc_ref[...])
+    acc_ref[...] = acc
+
+    @pl.when(k == n_k - 1)
+    def _flush():
+        out_ref[0] = acc_ref[...]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bm", "bn", "bk", "unroll_k", "interpret")
+)
+def maxplus_bmm(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 128,
+    unroll_k: int = 8,
+    interpret: bool = False,
+) -> jax.Array:
+    """C[g] = A[g] (x) B[g] in (max,+) for a stack of g matrices.
+
+    The batch dimension becomes the major grid dimension — each candidate's
+    blocks stream through VMEM independently with the same accumulator
+    scheme as :func:`maxplus_matmul`.  Shapes must be block multiples; use
+    :func:`repro.kernels.ops.maxplus_bmm` for arbitrary shapes.
+    """
+    g, m, k = a.shape
+    g2, k2, n = b.shape
+    assert g == g2 and k == k2, (a.shape, b.shape)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (
+        f"shape {(g, m, k, n)} not a multiple of blocks {(bm, bk, bn)}"
+    )
+    assert bk % unroll_k == 0
+    n_k = k // bk
+    grid = (g, m // bm, n // bn, n_k)
+
+    return pl.pallas_call(
+        functools.partial(_maxplus_bmm_kernel, n_k=n_k, unroll_k=unroll_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bm, bk), lambda gg, i, j, kk: (gg, i, kk)),
+            pl.BlockSpec((1, bk, bn), lambda gg, i, j, kk: (gg, kk, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bm, bn), lambda gg, i, j, kk: (gg, i, j)),
+        out_shape=jax.ShapeDtypeStruct((g, m, n), a.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), a.dtype)],
+        interpret=interpret,
+    )(a, b)

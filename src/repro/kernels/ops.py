@@ -19,6 +19,7 @@ from . import ref
 from .flash_attention import flash_attention as _flash
 from .lif_crossbar import lif_crossbar_step as _lif
 from .mamba_scan import mamba_chunk_scan as _mamba_chunk
+from .maxplus_matmul import maxplus_bmm as _maxplus_bmm
 from .maxplus_matmul import maxplus_matmul as _maxplus
 
 
@@ -62,6 +63,28 @@ def maxplus_matvec(a, x, *, interpret: bool | None = None):
     a = jnp.asarray(a, dtype=jnp.float32)
     x = jnp.asarray(x, dtype=jnp.float32)
     return ref.maxplus_matvec_ref(a, x)
+
+
+def maxplus_bmm(a, b, *, interpret: bool | None = None):
+    """C[g] = A[g] (x) B[g] for arbitrary shapes (pads with -inf).
+
+    The batched-analysis workhorse: one candidate graph per batch row.  On
+    TPU the stack streams through the batched Pallas kernel; elsewhere the
+    jnp oracle is exact and avoids interpret-mode launch overhead.
+    """
+    a = jnp.asarray(a, dtype=jnp.float32)
+    b = jnp.asarray(b, dtype=jnp.float32)
+    g, m, k = a.shape
+    _, _, n = b.shape
+    if interpret is None:
+        interpret = not _on_tpu()
+    if interpret or m * n * k < 64**3:
+        return ref.maxplus_bmm_ref(a, b)
+    bm = bn = bk = 128
+    ap = _pad_to(a, (1, bm, bk), float("-inf"))
+    bp = _pad_to(b, (1, bk, bn), float("-inf"))
+    out = _maxplus_bmm(ap, bp, bm=bm, bn=bn, bk=bk, interpret=False)
+    return out[:, :m, :n]
 
 
 # ======================================================================

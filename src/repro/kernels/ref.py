@@ -23,6 +23,15 @@ def maxplus_matvec_ref(a: jax.Array, x: jax.Array) -> jax.Array:
     return jnp.max(a + x[None, :], axis=1)
 
 
+def maxplus_bmm_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    """C[g,i,j] = max_k A[g,i,k] + B[g,k,j].
+
+    ``lax.map`` over the batch keeps the peak intermediate at one
+    (M, K, N) broadcast instead of materializing the whole stack's.
+    """
+    return jax.lax.map(lambda ab: maxplus_matmul_ref(ab[0], ab[1]), (a, b))
+
+
 # ----------------------------------------------------------------------
 def lif_crossbar_step_ref(
     spikes: jax.Array,

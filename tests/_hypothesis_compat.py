@@ -1,0 +1,69 @@
+"""Optional-``hypothesis`` shim for the property tests.
+
+``hypothesis`` is a dev dependency (see requirements-dev.txt) but must not
+be a hard import: the tier-1 suite has to collect and run in environments
+without it.  When present, re-export the real ``given/settings/strategies``.
+When absent, fall back to a deterministic stand-in that runs each property
+test over a fixed sample of the strategy's range — weaker than real
+property testing, but the invariants still get exercised.
+
+Only the tiny strategy surface these tests use is implemented
+(``st.integers(min_value=..., max_value=...)``).
+"""
+
+from __future__ import annotations
+
+try:  # pragma: no cover - exercised implicitly by which env runs the suite
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # deterministic fallback
+    HAVE_HYPOTHESIS = False
+
+    class _IntRange:
+        def __init__(self, min_value: int, max_value: int):
+            self.min_value = min_value
+            self.max_value = max_value
+
+        def sample(self, n: int) -> list[int]:
+            lo, hi = self.min_value, self.max_value
+            span = hi - lo
+            # endpoints + a deterministic spread across the range
+            pts = [lo + (span * k) // max(n - 1, 1) for k in range(n)]
+            return sorted(set(pts))
+
+    class st:  # type: ignore[no-redef]
+        @staticmethod
+        def integers(min_value: int, max_value: int) -> _IntRange:
+            return _IntRange(min_value, max_value)
+
+    def settings(*, max_examples: int = 10, **_ignored):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(*strategies: _IntRange):
+        def deco(fn):
+            # NOT functools.wraps: the wrapper must expose a zero-argument
+            # signature or pytest treats the strategy params as fixtures
+            def wrapper(*args, **kwargs):
+                n = getattr(wrapper, "_max_examples", 10)
+                cols = []
+                for idx, s in enumerate(strategies):
+                    samp = s.sample(n)
+                    # rotate each axis at a different stride so the zipped
+                    # combos vary on every argument, not just the last
+                    cols.append(
+                        [samp[(k * (idx + 1) + idx) % len(samp)] for k in range(n)]
+                    )
+                for combo in zip(*cols):
+                    fn(*args, *combo, **kwargs)
+
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            return wrapper
+
+        return deco

@@ -1,0 +1,235 @@
+"""ChannelTable IR, batched Max-Plus analysis, and the sweep/admission
+design-space-exploration subsystem."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    DYNAP_SE,
+    AdmissionError,
+    HardwareState,
+    bind_ours,
+    bind_pycarl,
+    bind_spinemap,
+    build_app,
+    build_static_orders,
+    mcr_howard,
+    partition_greedy,
+    runtime_admit,
+    score_free_tile_subsets,
+    sdfg_from_clusters,
+    single_tile_order,
+    small_app,
+    sweep,
+)
+from repro.core.maxplus import mcr_batch, stack_graphs, throughput_batch
+from repro.core.sdfg import (
+    KIND_BUFFER,
+    KIND_ORDER,
+    KIND_SELF,
+    Channel,
+    ChannelTable,
+    SDFG,
+    hardware_aware_sdfg,
+)
+
+
+@pytest.fixture(scope="module")
+def compiled():
+    snn = small_app(260, 3200, seed=31)
+    cl = partition_greedy(snn, DYNAP_SE)
+    app = sdfg_from_clusters(cl, hw=DYNAP_SE)
+    return snn, cl, app
+
+
+# ======================================================================
+# ChannelTable IR
+# ======================================================================
+def test_channel_table_roundtrip():
+    chans = [
+        Channel(0, 1, 0, 2.0, delay=0.5, kind="data"),
+        Channel(1, 0, 3, 2.0, kind="buffer"),
+        Channel(2, 2, 1, 1.0, kind="self"),
+    ]
+    t = ChannelTable.from_channels(chans)
+    assert len(t) == 3
+    assert list(t) == chans                       # iterator view round-trips
+    assert t[1] == chans[1]
+    assert t.kind_names() == ["data", "buffer", "self"]
+
+
+def test_sdfg_accepts_list_and_stores_table():
+    g = SDFG(
+        n_actors=2,
+        exec_time=np.array([1.0, 2.0]),
+        channels=[Channel(0, 1, 0, 1.0), Channel(1, 0, 1, 1.0)],
+    )
+    assert isinstance(g.channels, ChannelTable)
+    src, dst, w, m = g.edges_arrays()
+    np.testing.assert_array_equal(src, [0, 1])
+    np.testing.assert_array_equal(m, [0, 1])
+    np.testing.assert_allclose(w, [2.0, 1.0])     # tau[dst] + delay
+
+
+def test_clustered_channel_arrays_match_dict_view(compiled):
+    _, cl, _ = compiled
+    d = cl.channel_spikes                          # compat dict view
+    assert len(d) == cl.n_channels
+    for i, j, r in zip(cl.channel_src, cl.channel_dst, cl.channel_rate):
+        assert d[(int(i), int(j))] == pytest.approx(float(r))
+    # arrays are (src, dst)-sorted: deterministic IR for stacking
+    key = cl.channel_src * cl.n_clusters + cl.channel_dst
+    assert np.all(np.diff(key) > 0)
+
+
+def test_hardware_aware_sdfg_structure(compiled):
+    _, cl, app = compiled
+    b = bind_ours(cl, DYNAP_SE)
+    orders, _ = build_static_orders(app, b.binding, DYNAP_SE)
+    g = hardware_aware_sdfg(app, b.binding, DYNAP_SE, orders)
+    t = g.table
+    n_self = int((t.kind == KIND_SELF).sum())
+    assert n_self == app.n_actors
+    # every non-self app channel got a buffer back-edge
+    n_data = cl.n_channels
+    assert int((t.kind == KIND_BUFFER).sum()) == n_data
+    # order cycles close per tile (one wrap-around token each)
+    order_mask = t.kind == KIND_ORDER
+    if order_mask.any():
+        assert t.tokens[order_mask].sum() == sum(
+            1 for o in orders if len([a for a in o]) > 1
+        )
+    assert g.is_live()
+
+
+# ======================================================================
+# batched analysis vs per-graph Howard
+# ======================================================================
+def test_mcr_batch_matches_howard_across_bindings(compiled):
+    _, cl, app = compiled
+    rng = np.random.default_rng(7)
+    graphs = []
+    for binder in (bind_ours, bind_spinemap, bind_pycarl):
+        b = binder(cl, DYNAP_SE)
+        orders, _ = build_static_orders(app, b.binding, DYNAP_SE)
+        graphs.append(hardware_aware_sdfg(app, b.binding, DYNAP_SE, orders))
+    for _ in range(5):
+        binding = rng.integers(0, DYNAP_SE.n_tiles, size=app.n_actors)
+        graphs.append(hardware_aware_sdfg(app, binding, DYNAP_SE))
+    expected = np.array([mcr_howard(g) for g in graphs])
+    got = mcr_batch(stack_graphs(graphs), backend="edges")
+    np.testing.assert_allclose(got, expected, rtol=1e-6)
+
+
+def test_mcr_batch_matches_howard_on_real_apps():
+    """Acceptance shape at test scale: stacked real-app graphs, mixed
+    topologies and actor counts, 1e-6 relative vs per-graph Howard."""
+    graphs = []
+    for name in ("ImgSmooth", "MLP-MNIST"):
+        cl = partition_greedy(build_app(name), DYNAP_SE)
+        app = sdfg_from_clusters(cl, hw=DYNAP_SE)
+        for binder in (bind_ours, bind_spinemap):
+            b = binder(cl, DYNAP_SE)
+            orders, _ = build_static_orders(app, b.binding, DYNAP_SE)
+            graphs.append(hardware_aware_sdfg(app, b.binding, DYNAP_SE, orders))
+    expected = np.array([mcr_howard(g) for g in graphs])
+    got = mcr_batch(stack_graphs(graphs), backend="edges")
+    np.testing.assert_allclose(got, expected, rtol=1e-6)
+
+
+def test_mcr_batch_dense_kernel_backend(compiled):
+    """The Pallas/jnp dense path (float32 matrix squaring) agrees loosely."""
+    _, cl, app = compiled
+    rng = np.random.default_rng(3)
+    graphs = [
+        hardware_aware_sdfg(
+            app, rng.integers(0, 4, size=app.n_actors), DYNAP_SE
+        )
+        for _ in range(4)
+    ]
+    expected = np.array([mcr_howard(g) for g in graphs])
+    got = mcr_batch(stack_graphs(graphs), backend="dense")
+    np.testing.assert_allclose(got, expected, rtol=1e-3)
+
+
+@pytest.mark.parametrize("backend", ["edges", "dense"])
+def test_throughput_batch_zero_for_acyclic(backend):
+    g_line = SDFG(
+        n_actors=2,
+        exec_time=np.array([1.0, 1.0]),
+        channels=[Channel(0, 1, 0, 1.0)],
+    )
+    thr = throughput_batch([g_line], backend=backend)
+    assert thr.shape == (1,)
+    assert thr[0] == 0.0
+
+
+# ======================================================================
+# sweep API
+# ======================================================================
+def test_sweep_report_matches_per_graph_loop(compiled):
+    snn, _, _ = compiled
+    batched = sweep(
+        [snn], crossbar_sizes=(64, 128), tile_counts=(1, 4),
+        binders=("ours", "spinemap"),
+    )
+    looped = sweep(
+        [snn], crossbar_sizes=(64, 128), tile_counts=(1, 4),
+        binders=("ours", "spinemap"), method="howard-loop",
+    )
+    assert batched.n_candidates == looped.n_candidates == 8
+    for pb, pl_ in zip(batched.points, looped.points):
+        assert (pb.app, pb.crossbar, pb.n_tiles, pb.binder) == (
+            pl_.app, pl_.crossbar, pl_.n_tiles, pl_.binder
+        )
+        assert pb.throughput == pytest.approx(pl_.throughput, rel=1e-6)
+    best = batched.best(snn.name)
+    assert best.throughput == max(p.throughput for p in batched.points)
+
+
+# ======================================================================
+# run-time admission: error + batched tile-subset scoring
+# ======================================================================
+def test_admission_rejects_oversized_request(compiled):
+    _, cl, _ = compiled
+    order, _ = single_tile_order(cl, DYNAP_SE)
+    state = HardwareState(DYNAP_SE)
+    state.allocated["other"] = [0, 1, 2]
+    with pytest.raises(AdmissionError, match="requested 2 tiles but only 1"):
+        runtime_admit(cl, state, order, n_tiles_request=2)
+    with pytest.raises(AdmissionError, match="no free tiles"):
+        state.allocated["more"] = [3]
+        runtime_admit(cl, state, order)
+
+
+def test_admission_subset_scoring_beats_first_k(compiled):
+    _, cl, _ = compiled
+    order, _ = single_tile_order(cl, DYNAP_SE)
+    best = runtime_admit(
+        cl, HardwareState(DYNAP_SE), order, n_tiles_request=2
+    )
+    first = runtime_admit(
+        cl, HardwareState(DYNAP_SE), order, n_tiles_request=2,
+        tile_selection="first",
+    )
+    assert best.throughput >= first.throughput * (1 - 1e-9)
+    assert len(set(best.binding.tolist())) <= 2
+
+
+def test_score_free_tile_subsets_consistent(compiled):
+    _, cl, _ = compiled
+    order, _ = single_tile_order(cl, DYNAP_SE)
+    hw16 = dataclasses.replace(DYNAP_SE, n_tiles=16)
+    scores = score_free_tile_subsets(
+        cl, hw16, list(range(8)), 2, order, max_candidates=16
+    )
+    assert len(scores.throughputs) == len(scores.subsets) <= 16
+    assert scores.best == scores.subsets[int(np.argmax(scores.throughputs))]
+    assert np.all(scores.throughputs > 0)
+    # the virtual binding is reusable by runtime_admit: k-tile ids only
+    assert set(scores.binding.tolist()) <= {0, 1}
+    assert sorted(a for o in scores.virt_orders for a in o) == list(
+        range(cl.n_clusters)
+    )

@@ -39,6 +39,38 @@ def test_maxplus_matmul_neginf_identity():
     np.testing.assert_allclose(np.asarray(out), a, atol=1e-6)
 
 
+@pytest.mark.parametrize("g,m,k,n", [(3, 128, 128, 128), (2, 200, 96, 64), (5, 32, 32, 32)])
+def test_maxplus_bmm_shapes(g, m, k, n):
+    a = RNG.normal(size=(g, m, k)).astype(np.float32)
+    b = RNG.normal(size=(g, k, n)).astype(np.float32)
+    out = ops.maxplus_bmm(a, b)
+    exp = ref.maxplus_bmm_ref(jnp.asarray(a), jnp.asarray(b))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), atol=1e-5)
+
+
+def test_maxplus_bmm_kernel_interpret_matches_ref():
+    """The batched Pallas kernel itself (interpret mode) against the oracle."""
+    from repro.kernels.maxplus_matmul import maxplus_bmm as kern
+
+    a = RNG.normal(size=(2, 128, 128)).astype(np.float32)
+    b = RNG.normal(size=(2, 128, 128)).astype(np.float32)
+    out = kern(jnp.asarray(a), jnp.asarray(b), interpret=True)
+    exp = ref.maxplus_bmm_ref(jnp.asarray(a), jnp.asarray(b))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), atol=1e-5)
+
+
+def test_maxplus_bmm_neginf_padding_rows():
+    """-inf rows/cols (the EdgeStack padding convention) stay neutral."""
+    g, n = 2, 64
+    a = RNG.normal(size=(g, n, n)).astype(np.float32)
+    b = RNG.normal(size=(g, n, n)).astype(np.float32)
+    a[:, n // 2:, :] = -np.inf
+    out = np.asarray(ops.maxplus_bmm(a, b))
+    assert np.all(np.isneginf(out[:, n // 2:, :]))
+    exp = np.asarray(ref.maxplus_bmm_ref(jnp.asarray(a), jnp.asarray(b)))
+    np.testing.assert_allclose(out[:, : n // 2], exp[:, : n // 2], atol=1e-5)
+
+
 def test_maxplus_matmul_associativity():
     a = RNG.normal(size=(64, 64)).astype(np.float32)
     b = RNG.normal(size=(64, 64)).astype(np.float32)

@@ -1,11 +1,9 @@
 """Max-Plus analysis: three evaluators must agree; brute force on tiny graphs."""
 
-import itertools
-
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+from tests._hypothesis_compat import given, settings, st
 
 from repro.core.maxplus import (
     maxplus_matrix,
@@ -97,6 +95,34 @@ def test_power_iteration_matches_howard_single_token(seed):
     howard = mcr_howard(g)
     power = mcm_power_iteration(maxplus_matrix(g), iters=400, use_kernel=False)
     assert np.isclose(power, howard, rtol=1e-3), (power, howard)
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_power_iteration_converges_on_strongly_connected(seed):
+    """Convergence check after the renormalization cleanup: power iteration
+    (kernel matvec path included) agrees with Howard on random strongly-
+    connected event graphs whose markings are all <= 1 (where T is exact)."""
+    rng = np.random.default_rng(300 + seed)
+    n = int(rng.integers(4, 16))
+    tau = rng.uniform(0.5, 5.0, size=n)
+    channels = [Channel(i, i, 1, 1.0, kind="self") for i in range(n)]
+    # a random Hamiltonian cycle makes the graph strongly connected
+    perm = rng.permutation(n)
+    for a, b in zip(perm, np.roll(perm, -1)):
+        channels.append(Channel(int(a), int(b), 1, 1.0,
+                                delay=float(rng.uniform(0, 1.0))))
+    for _ in range(2 * n):
+        i, j = int(rng.integers(n)), int(rng.integers(n))
+        if i != j:
+            channels.append(Channel(i, j, 1, 1.0))
+    g = SDFG(n_actors=n, exec_time=tau, channels=channels)
+    assert g.is_live()
+    howard = mcr_howard(g)
+    for use_kernel in (False, True):
+        power = mcm_power_iteration(
+            maxplus_matrix(g), iters=400, use_kernel=use_kernel
+        )
+        assert np.isclose(power, howard, rtol=1e-3), (use_kernel, power, howard)
 
 
 def test_deadlocked_graph_reports_inf():
