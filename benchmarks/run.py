@@ -3,6 +3,7 @@ roofline table from dry-run artifacts.  Prints CSV blocks.
 
   PYTHONPATH=src python -m benchmarks.run            # everything
   PYTHONPATH=src python -m benchmarks.run fig13      # one benchmark
+  PYTHONPATH=src python -m benchmarks.run admission  # + BENCH_admission.json
 
 The design-space sweep benchmark (batched Max-Plus vs per-graph loop)
 lives in its own module:  PYTHONPATH=src python -m benchmarks.sweep
@@ -27,6 +28,16 @@ def main() -> None:
         print(f"\n# {name}  ({dt:.1f}s)")
         for row in rows:
             print(",".join(str(x) for x in row))
+
+    if want is None or "admission" in want:
+        from . import admission
+
+        t0 = time.perf_counter()
+        rows, summary, _ = admission.run()
+        print(f"\n# admission  ({time.perf_counter() - t0:.1f}s)")
+        for row in rows:
+            print(",".join(str(x) for x in row))
+        print("##", summary)
 
     if want is None or "roofline" in want:
         print("\n# roofline_single_pod (from dry-run artifacts)")

@@ -10,6 +10,12 @@ Pipeline (paper Fig. 2):
 """
 
 from .apps import APP_NAMES, APP_SPECS, all_apps, build_app, small_app
+from .engine import (
+    EngineReport,
+    batch_execute,
+    batch_throughputs,
+    stack_hardware_aware,
+)
 from .explore import (
     BINDERS,
     SubsetScores,
@@ -41,7 +47,9 @@ from .hardware import (
 from .lif import LIFParams, simulate_spikes, with_simulated_spikes
 from .maxplus import (
     EdgeStack,
+    evolve_batch,
     maxplus_matrix,
+    maxplus_matrix_batch,
     mcm_power_iteration,
     mcr_batch,
     mcr_binary_search,
@@ -52,8 +60,11 @@ from .maxplus import (
 )
 from .partition import Cluster, ClusteredSNN, partition_greedy
 from .runtime import (
+    AdmissionController,
     AdmissionError,
+    AdmissionEvent,
     CompileReport,
+    DesignArtifact,
     HardwareState,
     design_time_compile,
     project_order,

@@ -1,0 +1,212 @@
+"""Batched self-timed execution engine (paper §4.4–§5, array-native).
+
+Once static orders exist, the order-edge-augmented event graph fully
+determines self-timed execution: its evolution is the max-plus recursion
+``x(k) = A (x) x(k-1)`` (Eq. 4), so the steady-state period and per-actor
+start times follow from *analysis* rather than discrete-event replay.  This
+module evaluates MANY candidate configurations of one application at once —
+bindings, free-tile subsets, static orders — exploiting that all candidates
+share the application's topology (self-edges, data flow, buffer back-edges)
+and differ only in NoC delays and TDMA order edges:
+
+  * :func:`stack_hardware_aware` builds the whole candidate batch directly
+    as an :class:`~.maxplus.EdgeStack` (B, E) — per-row §4.4 transformation
+    without materializing B ``SDFG`` objects.
+  * :func:`batch_execute` analyzes the stack in one shot: exact periods via
+    the batched lambda-search (:func:`~.maxplus.mcr_batch`), and optionally
+    steady-state start-time vectors by iterating the batched max-plus
+    recursion through the Pallas ``maxplus_bmm``/``maxplus_bmv`` kernels
+    (:func:`~.maxplus.maxplus_matrix_batch` / :func:`~.maxplus.evolve_batch`).
+
+The heapq :class:`~.schedule.SelfTimedExecutor` remains the FCFS
+static-order *constructor* (§4.4 step 2) and the operational
+cross-validation oracle — see ``tests/test_engine.py``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional, Sequence
+
+import numpy as np
+
+from .hardware import HardwareConfig
+from .maxplus import (
+    NEG_INF,
+    EdgeStack,
+    evolve_batch,
+    maxplus_matrix_batch,
+    mcr_batch,
+)
+from .sdfg import SDFG, flow_delays, hardware_static_parts, order_edges
+
+
+# ======================================================================
+# batched §4.4 graph construction: one EdgeStack for B candidates
+# ======================================================================
+def _as_binding_matrix(bindings, n_actors: int) -> np.ndarray:
+    b = np.asarray(bindings, dtype=np.int64)
+    if b.ndim == 1:
+        b = b[None, :]
+    assert b.ndim == 2 and b.shape[1] == n_actors, b.shape
+    return b
+
+
+def stack_hardware_aware(
+    app: SDFG,
+    bindings,
+    hw: HardwareConfig,
+    orders_list: Optional[Sequence[Optional[Sequence[Sequence[int]]]]] = None,
+) -> EdgeStack:
+    """Hardware-aware graphs of B candidate bindings as ONE EdgeStack.
+
+    ``bindings`` is (B, n_actors) (a single (n,) binding is promoted);
+    ``orders_list`` optionally gives per-candidate static orders (entries
+    may be None for order-free candidates).  Self-edges, flow edges and
+    buffer back-edges share src/dst/tokens across rows — only flow delays
+    (NoC hops of each candidate's binding) and the order-edge slots differ.
+    Order-edge slots are padded to the batch maximum with ``-inf`` weight,
+    the (max,+) neutral element, so padding never joins a longest path.
+    """
+    bindings = _as_binding_matrix(bindings, app.n_actors)
+    n_b = bindings.shape[0]
+    assert bindings.min(initial=0) >= 0 and bindings.max(initial=0) < hw.n_tiles, (
+        f"binding tile ids must lie in [0, {hw.n_tiles})"
+    )
+    if orders_list is not None:
+        assert len(orders_list) == n_b, (len(orders_list), n_b)
+
+    keep_self, flow, back = hardware_static_parts(app, hw)
+    tau = app.exec_time
+
+    # shared part: (E0,) arrays broadcast over rows.  Self/buffer edges keep
+    # their app-level delay (flow delays are *replaced* by the NoC model,
+    # exactly as in hardware_aware_sdfg).
+    base_src = np.concatenate([keep_self.src, flow.src, back.src])
+    base_dst = np.concatenate([keep_self.dst, flow.dst, back.dst])
+    base_tok = np.concatenate([keep_self.tokens, flow.tokens, back.tokens])
+    e0 = base_src.size
+    ef = len(flow)
+
+    # per-row flow delays in one vectorized call: (B, Ef)
+    delays = flow_delays(flow, bindings, hw) if ef else np.zeros((n_b, 0))
+    base_w = (tau[base_dst] + np.concatenate(
+        [keep_self.delay, np.zeros(ef), back.delay]
+    ))[None, :].repeat(n_b, axis=0)
+    base_w[:, keep_self.src.size : keep_self.src.size + ef] += delays
+
+    # per-row order edges (variable count), padded to the batch maximum
+    order_tables = []
+    if orders_list is not None:
+        for row, orders in enumerate(orders_list):
+            order_tables.append(
+                order_edges(orders, bindings[row]) if orders is not None
+                else None
+            )
+    eo = max((len(t) for t in order_tables if t is not None), default=0)
+
+    src = np.zeros((n_b, e0 + eo), dtype=np.int64)
+    dst = np.zeros((n_b, e0 + eo), dtype=np.int64)
+    tokens = np.ones((n_b, e0 + eo), dtype=np.int64)
+    weights = np.full((n_b, e0 + eo), NEG_INF)
+    src[:, :e0] = base_src
+    dst[:, :e0] = base_dst
+    tokens[:, :e0] = base_tok
+    weights[:, :e0] = base_w
+    for row, t in enumerate(order_tables):
+        if t is None or not len(t):
+            continue
+        k = len(t)
+        src[row, e0 : e0 + k] = t.src
+        dst[row, e0 : e0 + k] = t.dst
+        tokens[row, e0 : e0 + k] = t.tokens
+        weights[row, e0 : e0 + k] = tau[t.dst]
+    return EdgeStack(
+        n_actors=app.n_actors, src=src, dst=dst, tokens=tokens, weights=weights
+    )
+
+
+# ======================================================================
+# batched execution: periods (+ optional steady-state start times)
+# ======================================================================
+@dataclasses.dataclass
+class EngineReport:
+    """Batched self-timed analysis of B candidate configurations.
+
+    ``periods[b]`` is candidate b's steady-state iteration period (the MCR
+    of its order-augmented event graph); ``starts``, when requested, holds
+    per-actor steady-state start-time offsets from the max-plus recursion
+    (normalized so each row's earliest actor starts at 0) — the static
+    schedule the paper's Eq. 4 evolution converges to.
+    """
+
+    periods: np.ndarray                 # (B,)
+    starts: Optional[np.ndarray]        # (B, n_actors) or None
+    build_time_s: float
+    analysis_time_s: float
+
+    @property
+    def throughputs(self) -> np.ndarray:
+        ok = np.isfinite(self.periods) & (self.periods > 0)
+        out = np.zeros_like(self.periods)
+        out[ok] = 1.0 / self.periods[ok]
+        return out
+
+    @property
+    def n_candidates(self) -> int:
+        return int(self.periods.size)
+
+
+def batch_execute(
+    app: SDFG,
+    bindings,
+    hw: HardwareConfig,
+    orders_list: Optional[Sequence[Optional[Sequence[Sequence[int]]]]] = None,
+    *,
+    backend: str = "auto",
+    rel_tol: float = 1e-8,
+    with_starts: bool = False,
+    power_iters: int = 64,
+) -> EngineReport:
+    """Self-timed steady state of every candidate, in one batched pass.
+
+    Replaces the per-candidate heapq simulation loop: periods come from the
+    batched lambda-search over the stacked edge arrays; start-time vectors
+    (optional — they cost a dense (B, n, n) matrix build) from iterating
+    ``x(k) = A (x) x(k-1)`` through the batched semiring kernels.
+    """
+    t0 = time.perf_counter()
+    stack = stack_hardware_aware(app, bindings, hw, orders_list)
+    t_build = time.perf_counter() - t0
+
+    t1 = time.perf_counter()
+    periods = mcr_batch(stack, backend=backend, rel_tol=rel_tol)
+    starts = None
+    if with_starts:
+        t_mat = maxplus_matrix_batch(stack)
+        x, _ = evolve_batch(t_mat, iters=power_iters)
+        finite = np.isfinite(x)
+        lo = np.where(finite, x, np.inf).min(axis=1, keepdims=True)
+        starts = np.where(finite, x - lo, np.inf)
+    return EngineReport(
+        periods=periods,
+        starts=starts,
+        build_time_s=t_build,
+        analysis_time_s=time.perf_counter() - t1,
+    )
+
+
+def batch_throughputs(
+    app: SDFG,
+    bindings,
+    hw: HardwareConfig,
+    orders_list=None,
+    *,
+    backend: str = "auto",
+    rel_tol: float = 1e-8,
+) -> np.ndarray:
+    """Throughput (1/period) per candidate; zero for dead/acyclic rows."""
+    return batch_execute(
+        app, bindings, hw, orders_list, backend=backend, rel_tol=rel_tol
+    ).throughputs

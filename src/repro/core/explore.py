@@ -29,6 +29,7 @@ from typing import Callable, Optional, Sequence, Union
 import numpy as np
 
 from .binding import bind_ours, bind_pycarl, bind_spinemap, cut_spikes
+from .engine import batch_throughputs
 from .hardware import DYNAP_SE, CrossbarConfig, HardwareConfig, TileConfig
 from .maxplus import mcr_batch, mcr_howard, stack_graphs, throughput_batch
 from .partition import ClusteredSNN, partition_greedy
@@ -302,15 +303,20 @@ def score_free_tile_subsets(
         bres = binder(clustered, sub_hw)
     virt_orders = project_order(list(single_order), bres.binding, k)
 
+    # one (B, n_clusters) binding matrix + per-candidate projected orders;
+    # the engine builds the candidate EdgeStack directly — no per-candidate
+    # SDFG objects, no per-candidate §4.4 transformation in Python
     app_g = sdfg_from_clusters(clustered, hw=hw)
-    graphs = []
+    phys_bindings = np.asarray(subsets, dtype=np.int64)[:, bres.binding]
+    orders_list = []
     for subset in subsets:
-        phys_binding = np.array([subset[t] for t in bres.binding], dtype=np.int64)
         phys_orders: list[list[int]] = [[] for _ in range(hw.n_tiles)]
         for virt, phys in enumerate(subset):
             phys_orders[phys] = virt_orders[virt]
-        graphs.append(hardware_aware_sdfg(app_g, phys_binding, hw, phys_orders))
-    thrs = throughput_batch(graphs, backend=backend)
+        orders_list.append(phys_orders)
+    thrs = batch_throughputs(
+        app_g, phys_bindings, hw, orders_list, backend=backend
+    )
     return SubsetScores(
         subsets=subsets,
         throughputs=thrs,

@@ -26,6 +26,14 @@ Batched evaluator (the design-space-exploration hot path):
     ``"dense"`` (max-plus matrix squaring through the Pallas
     ``maxplus_bmm`` semiring kernel on TPU / jnp oracle elsewhere —
     float32, looser tolerance, wins at large batch x actor counts).
+
+Batched Eq.-4 evolution (the self-timed engine's start-time path):
+
+  * :func:`maxplus_matrix_batch` — (B, n, n) matrices ``T = A0* (x) A1``
+    with the Kleene star computed by repeated ``maxplus_bmm`` squaring.
+  * :func:`evolve_batch` — iterate ``x(k) = T (x) x(k-1)`` for the whole
+    batch through ``maxplus_bmv``; returns steady-state start vectors and
+    a growth-rate period estimate (exact periods come from `mcr_batch`).
 """
 
 from __future__ import annotations
@@ -515,6 +523,84 @@ def _mcr_batch_dense(
     # rows that never showed a positive cycle at any probed lambda (and have
     # no self-loop cycle) are acyclic — same convention as the edges backend
     return np.where(has_cycle, 0.5 * (lo + hi), NEG_INF).astype(np.float64)
+
+
+def _dense_weight_matrix(
+    stack: EdgeStack, mask: np.ndarray, *, dtype=np.float32
+) -> np.ndarray:
+    """(B, n, n) dense ``W[b, d, s] = max weight over masked edges s->d``."""
+    b, n = stack.n_graphs, stack.n_actors
+    w = np.full(b * n * n, NEG_INF, dtype=dtype)
+    rows = np.arange(b, dtype=np.int64)[:, None]
+    flat = (rows * n * n + stack.dst * n + stack.src).ravel()
+    sel = mask.ravel()
+    fl = flat[sel]
+    if fl.size:
+        ww = stack.weights.ravel()[sel].astype(dtype)
+        order = np.argsort(fl, kind="stable")
+        uniq, seg = np.unique(fl[order], return_index=True)
+        w[uniq] = np.maximum.reduceat(ww[order], seg)
+    return w.reshape(b, n, n)
+
+
+def maxplus_matrix_batch(stack: EdgeStack) -> np.ndarray:
+    """Batched Eq.-4 matrices: ``T[b] = A0*[b] (x) A1[b]`` as (B, n, n).
+
+    The per-graph construction (:func:`maxplus_matrix`) walks the 0-token
+    subgraph in topological order; the batched one instead computes the
+    Kleene star ``A0* = (I (+) A0)^(2^ceil(log2 n))`` by repeated max-plus
+    squaring through the Pallas ``maxplus_bmm`` kernel — every candidate's
+    closure advances together.  Multi-token edges are conservatively kept
+    as one-token dependencies (same convention as :func:`maxplus_matrix`);
+    exact multi-token periods come from :func:`mcr_batch`.  Rows must be
+    live (an acyclic 0-token subgraph), which this pipeline guarantees.
+    """
+    from repro.kernels import ops as kops
+
+    n = stack.n_actors
+    finite = np.isfinite(stack.weights)
+    w0 = _dense_weight_matrix(stack, finite & (stack.tokens == 0))
+    w1 = _dense_weight_matrix(stack, finite & (stack.tokens >= 1))
+    diag = np.arange(n)
+    star = w0
+    star[:, diag, diag] = np.maximum(star[:, diag, diag], 0.0)
+    for _ in range(max(1, int(math.ceil(math.log2(max(n, 2)))))):
+        star = np.asarray(kops.maxplus_bmm(star, star))
+    return np.asarray(kops.maxplus_bmm(star, w1))
+
+
+def evolve_batch(
+    t_batch: np.ndarray, *, iters: int = 64, x0: Optional[np.ndarray] = None
+) -> tuple[np.ndarray, np.ndarray]:
+    """Iterate ``x(k) = T (x) x(k-1)`` for a whole batch of candidates.
+
+    Returns ``(x, period_estimate)``: the final (renormalized) start-time
+    vectors, whose *relative* offsets converge to the steady-state static
+    schedule, and the mean per-iteration growth over the tail half of the
+    run — a float32 MCM estimate (use :func:`mcr_batch` when the exact
+    period is needed).  Each step renormalizes by the row maximum (max-plus
+    scaling invariance) so float32 never accumulates drift.
+    """
+    from repro.kernels import ops as kops
+
+    t_batch = np.asarray(t_batch, dtype=np.float32)
+    b, n, _ = t_batch.shape
+    if x0 is None:
+        x = np.zeros((b, n), dtype=np.float32)
+    else:
+        x = np.array(x0, dtype=np.float32, copy=True)
+    warm = max(1, iters // 2)
+    growth = np.zeros(b)
+    counted = 0
+    for k in range(iters):
+        x = np.asarray(kops.maxplus_bmv(t_batch, x))
+        mx = np.where(np.isfinite(x), x, NEG_INF).max(axis=1)
+        step = np.where(np.isfinite(mx), mx, 0.0)
+        x = x - step[:, None].astype(np.float32)
+        if k >= warm:
+            growth += step
+            counted += 1
+    return x.astype(np.float64), growth / max(counted, 1)
 
 
 def throughput_batch(

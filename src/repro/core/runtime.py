@@ -1,4 +1,4 @@
-"""Run-time resource management (paper §5).
+"""Run-time resource management (paper §5): multi-app admission control.
 
 Design time:  build ONE single-tile static-order schedule (all actors bound
 to tile 0, FCFS self-timed execution records the total order); discard exact
@@ -10,25 +10,35 @@ currently available (§4.2 load balancing restricted to free tiles), then
 resulting multi-tile schedule is deadlock-free — and execute self-timed.
 No per-tile schedule is constructed from scratch, which is where ~75% of
 compilation time goes (§7.3), so admission is fast (Table 3).
+
+The :class:`AdmissionController` makes this multi-tenant: persistent
+tile-occupancy state across applications, an ``admit`` / ``finish`` /
+``evict`` lifecycle with an event trajectory, a design-time artifact cache
+keyed on ``(app, hardware)`` so re-admission skips clustering and order
+construction entirely, and batched scoring of candidate free-tile bindings
+through the array-native engine (:mod:`repro.core.engine`).  The
+module-level :func:`runtime_admit` remains the single-admission primitive
+the controller drives.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Optional
+from typing import Optional, Union
 
 import numpy as np
 
 from .binding import BindingResult, LoadWeights, bind_ours
 from .hardware import HardwareConfig
-from .partition import ClusteredSNN
+from .partition import ClusteredSNN, partition_greedy
 from .schedule import (
     SelfTimedExecutor,
     analyze_throughput,
     build_static_orders,
 )
 from .sdfg import SDFG, sdfg_from_clusters
+from .snn import SNN
 
 
 @dataclasses.dataclass
@@ -220,6 +230,224 @@ def runtime_admit(
         bind_time_s=t_bind,
         schedule_time_s=t_sched,
     )
+
+
+# ======================================================================
+# multi-app admission controller (§5 made multi-tenant)
+# ======================================================================
+@dataclasses.dataclass
+class DesignArtifact:
+    """Cached design-time products of one (application, hardware) pair.
+
+    Everything admission needs that does NOT depend on which tiles happen
+    to be free: the clustering (Alg. 1) and the single-tile static order
+    (§5).  ``hits`` counts cache reuses — a re-admitted app pays neither
+    clustering nor order construction again.
+    """
+
+    app: str
+    clustered: ClusteredSNN
+    single_order: list[int]
+    design_time_s: float
+    hits: int = 0
+
+
+@dataclasses.dataclass
+class AdmissionEvent:
+    """One step of the controller's lifecycle trajectory."""
+
+    kind: str                 # admit | reject | finish | evict
+    app: str
+    tiles: list[int]
+    wall_s: float             # wall-clock cost of the operation
+    throughput: float = 0.0
+    cache_hit: bool = False
+
+
+def _same_application(app: Union[SNN, ClusteredSNN], art: DesignArtifact) -> bool:
+    """Guard against a stale cache hit: same name, different network."""
+    if isinstance(app, ClusteredSNN):
+        return app is art.clustered or app.snn is art.clustered.snn
+    cached = art.clustered.snn
+    if app is cached:
+        return True
+    return (
+        app.n_neurons == cached.n_neurons
+        and np.array_equal(app.pre, cached.pre)
+        and np.array_equal(app.post, cached.post)
+        and np.array_equal(app.weight, cached.weight)
+        and np.array_equal(app.spikes, cached.spikes)
+    )
+
+
+class AdmissionController:
+    """Multi-tenant run-time resource manager (§5, Fig. 11).
+
+    Owns the persistent tile-occupancy state (:class:`HardwareState`), the
+    design-time artifact cache, and the admission trajectory::
+
+        ctl = AdmissionController(DYNAP_SE)
+        ctl.register(snn)                      # design time, once per app
+        rep = ctl.admit(snn.name, n_tiles_request=2)
+        ctl.finish(snn.name)                   # app completed: tiles free
+        rep2 = ctl.admit(snn.name)             # re-admission: cache hit
+
+    ``admit`` scores every feasible free-tile binding in one batched
+    engine call (see :func:`runtime_admit` with ``tile_selection=
+    "batched"``); ``evict`` is the preemption variant of ``finish`` —
+    same release mechanics, distinct trajectory event, returns the freed
+    tiles so a caller can re-admit a displaced app.
+    """
+
+    def __init__(
+        self,
+        hw: HardwareConfig,
+        *,
+        weights: LoadWeights = LoadWeights(),
+        tile_selection: str = "batched",
+        sim_iterations: int = 8,
+    ):
+        self.hw = hw
+        self.state = HardwareState(hw)
+        self.weights = weights
+        self.tile_selection = tile_selection
+        self.sim_iterations = sim_iterations
+        self.artifacts: dict[tuple[str, HardwareConfig], DesignArtifact] = {}
+        self.reports: dict[str, CompileReport] = {}
+        self.events: list[AdmissionEvent] = []
+
+    # -- design time ----------------------------------------------------
+    def register(self, app: Union[SNN, ClusteredSNN]) -> DesignArtifact:
+        """Run (or fetch) the design-time flow for ``app`` on this hardware.
+
+        Accepts a raw :class:`SNN` (clustered here) or a pre-clustered
+        application.  Idempotent: a second registration of the same name is
+        a cache hit and does no work.
+        """
+        name = app.snn.name if isinstance(app, ClusteredSNN) else app.name
+        key = (name, self.hw)
+        if key in self.artifacts:
+            art = self.artifacts[key]
+            if not _same_application(app, art):
+                raise ValueError(
+                    f"app {name!r} is already registered with different "
+                    f"contents on this hardware; use a distinct name"
+                )
+            art.hits += 1
+            return art
+        t0 = time.perf_counter()
+        clustered = (
+            app if isinstance(app, ClusteredSNN)
+            else partition_greedy(app, self.hw)
+        )
+        order, _ = single_tile_order(
+            clustered, self.hw, sim_iterations=self.sim_iterations
+        )
+        art = DesignArtifact(
+            app=name,
+            clustered=clustered,
+            single_order=order,
+            design_time_s=time.perf_counter() - t0,
+        )
+        self.artifacts[key] = art
+        return art
+
+    def _artifact(self, app: Union[str, SNN, ClusteredSNN]) -> tuple[DesignArtifact, bool]:
+        if isinstance(app, str):
+            key = (app, self.hw)
+            if key not in self.artifacts:
+                raise KeyError(
+                    f"app {app!r} was never registered with this controller; "
+                    f"known apps: {sorted(k for k, _ in self.artifacts)}"
+                )
+            art = self.artifacts[key]
+            art.hits += 1
+            return art, True
+        key = ((app.snn.name if isinstance(app, ClusteredSNN) else app.name),
+               self.hw)
+        cached = key in self.artifacts
+        return self.register(app), cached
+
+    # -- run time -------------------------------------------------------
+    def admit(
+        self,
+        app: Union[str, SNN, ClusteredSNN],
+        *,
+        n_tiles_request: Optional[int] = None,
+    ) -> CompileReport:
+        """Admit ``app`` onto the currently-free tiles (Fig. 11).
+
+        Raises :class:`AdmissionError` when the app is already running or
+        cannot be placed; rejections are recorded in the trajectory too.
+        """
+        art, cache_hit = self._artifact(app)
+        if art.app in self.state.allocated:
+            self.events.append(AdmissionEvent(
+                kind="reject", app=art.app, tiles=[], wall_s=0.0,
+                cache_hit=cache_hit,
+            ))
+            raise AdmissionError(
+                f"app {art.app!r} is already running on tiles "
+                f"{self.state.allocated[art.app]}; finish() or evict() first"
+            )
+        t0 = time.perf_counter()
+        try:
+            report = runtime_admit(
+                art.clustered,
+                self.state,
+                art.single_order,
+                n_tiles_request=n_tiles_request,
+                weights=self.weights,
+                tile_selection=self.tile_selection,
+            )
+        except AdmissionError:
+            self.events.append(AdmissionEvent(
+                kind="reject", app=art.app, tiles=[],
+                wall_s=time.perf_counter() - t0, cache_hit=cache_hit,
+            ))
+            raise
+        self.reports[art.app] = report
+        self.events.append(AdmissionEvent(
+            kind="admit",
+            app=art.app,
+            tiles=sorted(self.state.allocated[art.app]),
+            wall_s=time.perf_counter() - t0,
+            throughput=report.throughput,
+            cache_hit=cache_hit,
+        ))
+        return report
+
+    def _release(self, app: str, kind: str) -> list[int]:
+        if app not in self.state.allocated:
+            raise KeyError(
+                f"app {app!r} is not running; running: {sorted(self.state.allocated)}"
+            )
+        tiles = sorted(self.state.allocated[app])
+        self.state.release(app)
+        self.reports.pop(app, None)
+        self.events.append(
+            AdmissionEvent(kind=kind, app=app, tiles=tiles, wall_s=0.0)
+        )
+        return tiles
+
+    def finish(self, app: str) -> list[int]:
+        """App completed normally: free its tiles."""
+        return self._release(app, "finish")
+
+    def evict(self, app: str) -> list[int]:
+        """Forcibly preempt a running app (the Fig.-11 displacement case)."""
+        return self._release(app, "evict")
+
+    # -- introspection --------------------------------------------------
+    def running(self) -> dict[str, list[int]]:
+        return {a: sorted(t) for a, t in self.state.allocated.items()}
+
+    def free_tiles(self) -> list[int]:
+        return self.state.free_tiles()
+
+    def trajectory(self) -> list[dict]:
+        """JSON-ready event log (consumed by ``benchmarks/admission.py``)."""
+        return [dataclasses.asdict(e) for e in self.events]
 
 
 def verify_deadlock_free(

@@ -13,6 +13,14 @@ Two engines, cross-validated in tests:
 
 For strongly-connected live event graphs the executor's steady-state period
 equals the MCR — a property test asserts this.
+
+Batched evaluation of many candidate configurations does NOT loop this
+executor: once static orders exist, the order-augmented event graph fully
+determines self-timed execution, and :mod:`repro.core.engine` analyzes a
+whole candidate batch in one array pass (``x(k) = A (x) x(k-1)``).  The
+heapq executor remains the FCFS static-order *constructor* (§4.4 step 2)
+and the operational cross-validation oracle
+(:meth:`ExecutionTrace.steady_period` matches the engine to ~1e-9).
 """
 
 from __future__ import annotations
@@ -59,6 +67,34 @@ class ExecutionTrace:
     @property
     def throughput(self) -> float:
         return 0.0 if self.period <= 0 else 1.0 / self.period
+
+    def steady_period(self, *, atol: float = 1e-9) -> float:
+        """Asymptotic per-iteration period, free of the fill transient.
+
+        A live event graph reaches a periodic regime after finitely many
+        iterations: ``finish(k + c) = finish(k) + c * period`` for some
+        cyclicity ``c``.  Detect the smallest ``c`` whose last two windows
+        agree exactly and return the exact per-iteration growth — this is
+        what the batched engine's MCR must match to float precision.  Falls
+        back to the tail slope when the recorded window is too short for a
+        clean periodic match, and to ``period`` (0.0) on deadlock.
+        """
+        f = self.finish_times
+        if self.period <= 0 or f.size == 0 or np.isnan(f).any():
+            return self.period
+        n_iters = f.shape[0]
+        if n_iters < 3:  # no two disjoint windows to compare
+            return self.period
+        scale = max(1.0, float(np.abs(f[-1]).max()))
+        for c in range(1, (n_iters - 1) // 2 + 1):
+            a = f[n_iters - 1] - f[n_iters - 1 - c]
+            b = f[n_iters - 1 - c] - f[n_iters - 1 - 2 * c]
+            if np.allclose(a, b, rtol=0.0, atol=atol * scale):
+                # per-actor rates agree across windows; the slowest actor's
+                # rate is the iteration period of the whole graph
+                return float(a.max() / c)
+        k0 = n_iters // 2
+        return float((f[n_iters - 1] - f[k0]).max() / (n_iters - 1 - k0))
 
 
 class SelfTimedExecutor:

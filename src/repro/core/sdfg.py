@@ -326,6 +326,51 @@ def sdfg_from_clusters(
 
 
 # ----------------------------------------------------------------------
+def hardware_static_parts(
+    app: SDFG, hw: HardwareConfig
+) -> tuple[ChannelTable, ChannelTable, ChannelTable]:
+    """Binding-independent pieces of the §4.4 transformation.
+
+    Returns ``(self_edges, flow, buffer_back_edges)``: the self-edges, the
+    data/flow channels (delays still zero — they depend on the binding),
+    and the Step-1 buffer back-edges with ``floor(buffer / rate)`` initial
+    tokens (producing claims space, consuming releases it).  Everything a
+    candidate binding does to this structure is (a) per-edge NoC delays on
+    ``flow`` (:func:`flow_delays`) and (b) extra order edges — which is why
+    a *batch* of candidates over one app shares these arrays row-for-row.
+    """
+    t = app.channels
+    keep_self = t.select(t.kind == KIND_SELF)
+    flow = t.select(t.kind != KIND_SELF)
+    buf_tokens = np.maximum(
+        1,
+        (hw.tile.output_buffer // np.maximum(flow.rate, 1.0)).astype(np.int64),
+    )
+    back_edges = ChannelTable.from_arrays(
+        src=flow.dst,
+        dst=flow.src,
+        tokens=buf_tokens,
+        rate=flow.rate,
+        kind=KIND_BUFFER,
+    )
+    return keep_self, flow, back_edges
+
+
+def flow_delays(
+    flow: ChannelTable, binding: np.ndarray, hw: HardwareConfig
+) -> np.ndarray:
+    """NoC delay per flow edge; ``binding`` may be (n,) or batched (B, n).
+
+    Vectorized over the trailing edge axis, so a (B, n) binding matrix
+    yields a (B, E_flow) delay matrix in one call — the per-candidate part
+    of the §4.4 transformation used by the batched engine.
+    """
+    binding = np.asarray(binding, dtype=np.int64)
+    src_t = np.take(binding, flow.src, axis=-1)
+    dst_t = np.take(binding, flow.dst, axis=-1)
+    return hw.comm_delay_array(flow.rate, src_t, dst_t)
+
+
 def hardware_aware_sdfg(
     app: SDFG,
     binding: np.ndarray,
@@ -349,27 +394,8 @@ def hardware_aware_sdfg(
     assert binding.shape == (app.n_actors,)
     assert binding.max(initial=0) < hw.n_tiles
 
-    t = app.channels
-    keep_self = t.select(t.kind == KIND_SELF)
-    flow = t.select(t.kind != KIND_SELF)
-
-    src_t = binding[flow.src]
-    dst_t = binding[flow.dst]
-    delays = hw.comm_delay_array(flow.rate, src_t, dst_t)
-    flow_delayed = flow.replace(delay=delays)
-    # Step 1: buffer back-edge. Output buffer is claimed at firing start
-    # and released when the consumer drains it (§4.4 atomic execution).
-    buf_tokens = np.maximum(
-        1,
-        (hw.tile.output_buffer // np.maximum(flow.rate, 1.0)).astype(np.int64),
-    )
-    back_edges = ChannelTable.from_arrays(
-        src=flow.dst,
-        dst=flow.src,
-        tokens=buf_tokens,
-        rate=flow.rate,
-        kind=KIND_BUFFER,
-    )
+    keep_self, flow, back_edges = hardware_static_parts(app, hw)
+    flow_delayed = flow.replace(delay=flow_delays(flow, binding, hw))
 
     parts = [keep_self, flow_delayed, back_edges]
     if static_orders is not None:

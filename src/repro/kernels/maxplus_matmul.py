@@ -123,6 +123,67 @@ def _maxplus_bmm_kernel(a_ref, b_ref, out_ref, acc_ref, *, n_k: int, unroll_k: i
         out_ref[0] = acc_ref[...]
 
 
+# ----------------------------------------------------------------------
+# batched matvec: the Eq.-4 recursion x(k) = T (x) x(k-1) over a stack
+# ----------------------------------------------------------------------
+def _maxplus_bmv_kernel(a_ref, x_ref, out_ref, acc_ref, *, n_k: int):
+    """One (bm,) output slice of one batch element; K is grid dim 2."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.full_like(acc_ref[...], NEG)
+
+    a = a_ref[0]          # (bm, bk)
+    x = x_ref[...]        # (1, bk)
+    part = jnp.max(a + x, axis=1)[None, :]          # (1, bm)
+    acc_ref[...] = jnp.maximum(acc_ref[...], part)
+
+    @pl.when(k == n_k - 1)
+    def _flush():
+        out_ref[...] = acc_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "interpret"))
+def maxplus_bmv(
+    a: jax.Array,
+    x: jax.Array,
+    *,
+    bm: int = 128,
+    bk: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """y[g] = A[g] (x) x[g] in (max,+) for a stack of g matrix/vector pairs.
+
+    The self-timed evolution workhorse: each power-iteration step of the
+    whole candidate batch is one launch.  The reduction runs as a VPU max
+    over the broadcast (bm, bk) sum — a vector has no MXU path anyway, and
+    batching amortizes the launch.  Shapes must be block multiples; use
+    :func:`repro.kernels.ops.maxplus_bmv` for arbitrary shapes.
+    """
+    g, m, k = a.shape
+    g2, k2 = x.shape
+    assert g == g2 and k == k2, (a.shape, x.shape)
+    assert m % bm == 0 and k % bk == 0, (
+        f"shape {(g, m, k)} not a multiple of blocks {(bm, bk)}"
+    )
+    n_k = k // bk
+    grid = (g, m // bm, n_k)
+
+    return pl.pallas_call(
+        functools.partial(_maxplus_bmv_kernel, n_k=n_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bm, bk), lambda gg, i, kk: (gg, i, kk)),
+            pl.BlockSpec((1, bk), lambda gg, i, kk: (gg, kk)),
+        ],
+        out_specs=pl.BlockSpec((1, bm), lambda gg, i, kk: (gg, i)),
+        out_shape=jax.ShapeDtypeStruct((g, m), a.dtype),
+        scratch_shapes=[pltpu.VMEM((1, bm), a.dtype)],
+        interpret=interpret,
+    )(a, x)
+
+
 @functools.partial(
     jax.jit, static_argnames=("bm", "bn", "bk", "unroll_k", "interpret")
 )

@@ -20,6 +20,7 @@ from .flash_attention import flash_attention as _flash
 from .lif_crossbar import lif_crossbar_step as _lif
 from .mamba_scan import mamba_chunk_scan as _mamba_chunk
 from .maxplus_matmul import maxplus_bmm as _maxplus_bmm
+from .maxplus_matmul import maxplus_bmv as _maxplus_bmv
 from .maxplus_matmul import maxplus_matmul as _maxplus
 
 
@@ -63,6 +64,27 @@ def maxplus_matvec(a, x, *, interpret: bool | None = None):
     a = jnp.asarray(a, dtype=jnp.float32)
     x = jnp.asarray(x, dtype=jnp.float32)
     return ref.maxplus_matvec_ref(a, x)
+
+
+def maxplus_bmv(a, x, *, interpret: bool | None = None):
+    """y[g] = A[g] (x) x[g] for arbitrary shapes (pads with -inf).
+
+    One launch advances every candidate's Eq.-4 recursion by one step.  On
+    CPU / small stacks the jnp oracle is exact and cheaper than an
+    interpret-mode launch.
+    """
+    a = jnp.asarray(a, dtype=jnp.float32)
+    x = jnp.asarray(x, dtype=jnp.float32)
+    g, m, k = a.shape
+    if interpret is None:
+        interpret = not _on_tpu()
+    if interpret or g * m * k < 64**3:
+        return ref.maxplus_bmv_ref(a, x)
+    bm = bk = 128
+    ap = _pad_to(a, (1, bm, bk), float("-inf"))
+    xp = _pad_to(x, (1, bk), float("-inf"))
+    out = _maxplus_bmv(ap, xp, bm=bm, bk=bk, interpret=False)
+    return out[:, :m]
 
 
 def maxplus_bmm(a, b, *, interpret: bool | None = None):

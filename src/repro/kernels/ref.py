@@ -23,6 +23,11 @@ def maxplus_matvec_ref(a: jax.Array, x: jax.Array) -> jax.Array:
     return jnp.max(a + x[None, :], axis=1)
 
 
+def maxplus_bmv_ref(a: jax.Array, x: jax.Array) -> jax.Array:
+    """y[g,i] = max_k A[g,i,k] + x[g,k]."""
+    return jnp.max(a + x[:, None, :], axis=2)
+
+
 def maxplus_bmm_ref(a: jax.Array, b: jax.Array) -> jax.Array:
     """C[g,i,j] = max_k A[g,i,k] + B[g,k,j].
 

@@ -32,13 +32,30 @@ def current_mesh() -> Optional[Mesh]:
     return getattr(_STATE, "mesh", None)
 
 
+def _mesh_context(mesh: Mesh):
+    """Version-tolerant global-mesh context.
+
+    ``jax.set_mesh`` (newer jax) and ``jax.sharding.use_mesh`` (a brief
+    intermediate spelling) both set the mesh that resolves bare
+    ``PartitionSpec`` axis names; on jax versions with neither (e.g.
+    0.4.x), ``Mesh`` itself is the context manager with that meaning.
+    """
+    set_mesh = getattr(jax, "set_mesh", None)
+    if set_mesh is not None:
+        return set_mesh(mesh)
+    use = getattr(jax.sharding, "use_mesh", None)
+    if use is not None:
+        return use(mesh)
+    return mesh
+
+
 @contextlib.contextmanager
 def use_mesh(mesh: Mesh):
     """Make sharding constraints active (dry-run / real runs enter this)."""
     prev = getattr(_STATE, "mesh", None)
     _STATE.mesh = mesh
     try:
-        with jax.set_mesh(mesh):
+        with _mesh_context(mesh):
             yield mesh
     finally:
         _STATE.mesh = prev

@@ -1,0 +1,266 @@
+"""Batched self-timed engine: cross-validation against the heapq
+:class:`SelfTimedExecutor` oracle and per-graph ``mcr_howard`` (§4.4-§5)."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    DYNAP_SE,
+    SelfTimedExecutor,
+    batch_execute,
+    bind_ours,
+    build_static_orders,
+    mcr_batch,
+    mcr_howard,
+    partition_greedy,
+    sdfg_from_clusters,
+    small_app,
+    stack_graphs,
+    stack_hardware_aware,
+)
+from repro.core.hardware import HardwareConfig, TileConfig
+from repro.core.maxplus import evolve_batch, maxplus_matrix_batch
+from repro.core.sdfg import SDFG, ChannelTable, KIND_SELF, hardware_aware_sdfg
+from tests._hypothesis_compat import given, settings, st
+
+# small buffers keep the periodic regime's firing-count transient short, so
+# the oracle's steady_period() resolves within a few hundred iterations
+SMALL_BUF = dataclasses.replace(
+    DYNAP_SE, tile=TileConfig(input_buffer=8, output_buffer=8)
+)
+
+
+def random_strongly_connected_sdfg(seed: int, n: int = 8) -> SDFG:
+    """Random live strongly-connected timed event graph.
+
+    A forward ring 0->1->...->n-1 with 0-token edges and a 1+-token
+    wrap-around makes the graph strongly connected and live (the 0-token
+    subgraph follows actor order, hence acyclic); random chords carry a
+    token whenever they point backward.
+    """
+    rng = np.random.default_rng(seed)
+    tau = rng.uniform(0.5, 5.0, size=n)
+    src = list(range(n))
+    dst = list(range(n))
+    tokens = [1] * n
+    kind = [KIND_SELF] * n
+    for i in range(n):
+        j = (i + 1) % n
+        src.append(i)
+        dst.append(j)
+        tokens.append(int(rng.integers(1, 3)) if j <= i else 0)
+        kind.append(0)
+    for _ in range(2 * n):
+        i, j = rng.integers(0, n, size=2)
+        if i == j:
+            continue
+        src.append(int(i))
+        dst.append(int(j))
+        tokens.append(int(rng.integers(1, 4)) if j <= i else int(rng.integers(0, 2)))
+        kind.append(0)
+    g = SDFG(
+        n_actors=n,
+        exec_time=tau,
+        channels=ChannelTable.from_arrays(
+            src=src, dst=dst, tokens=tokens, rate=np.ones(len(src)), kind=kind
+        ),
+        name=f"rand{seed}",
+    )
+    g.validate()
+    assert g.is_live()
+    return g
+
+
+# ======================================================================
+# engine vs heapq oracle vs Howard, random strongly-connected graphs
+# ======================================================================
+@settings(max_examples=12, deadline=None)
+@given(st.integers(min_value=0, max_value=10_000))
+def test_engine_matches_oracle_on_random_graphs(seed):
+    n = 6 + seed % 5
+    g = random_strongly_connected_sdfg(seed, n=n)
+    hw = dataclasses.replace(SMALL_BUF, n_tiles=n)
+    binding = np.arange(n)
+    orders = [[a] for a in range(n)]
+
+    rep = batch_execute(g, binding, hw, [orders], backend="edges")
+    assert rep.periods.shape == (1,)
+    period_engine = float(rep.periods[0])
+
+    period_howard = mcr_howard(hardware_aware_sdfg(g, binding, hw, orders))
+    trace = SelfTimedExecutor(g, binding, hw, orders=orders).run(iterations=400)
+    period_oracle = trace.steady_period()
+
+    assert period_engine == pytest.approx(period_howard, rel=1e-6)
+    assert period_engine == pytest.approx(period_oracle, rel=1e-6)
+
+
+def test_engine_matches_oracle_with_shared_tiles():
+    """Multi-actor tiles under static-order replay: the order-augmented
+    graph's MCR must equal the operational steady-state period."""
+    snn = small_app(200, 2400, seed=17)
+    # cluster under the real buffer constraint, then execute on a
+    # moderate-buffer variant so the periodic regime is reached within the
+    # recorded window (buffer depth bounds how far actors run ahead)
+    cl = partition_greedy(snn, DYNAP_SE)
+    hw = dataclasses.replace(
+        DYNAP_SE, tile=dataclasses.replace(
+            DYNAP_SE.tile, input_buffer=64, output_buffer=64
+        )
+    )
+    app = sdfg_from_clusters(cl, hw=hw)
+    rng = np.random.default_rng(2)
+
+    bindings, orders_list = [], []
+    for i in range(4):
+        b = (bind_ours(cl, hw).binding if i == 0
+             else rng.integers(0, hw.n_tiles, size=app.n_actors))
+        orders, _ = build_static_orders(app, b, hw, iterations=8)
+        bindings.append(b)
+        orders_list.append(orders)
+
+    rep = batch_execute(app, np.array(bindings), hw, orders_list,
+                        backend="edges")
+    for row, (b, orders) in enumerate(zip(bindings, orders_list)):
+        trace = SelfTimedExecutor(app, b, hw, orders=orders).run(
+            iterations=400
+        )
+        assert rep.periods[row] == pytest.approx(
+            trace.steady_period(), rel=1e-6
+        ), row
+        assert rep.periods[row] == pytest.approx(
+            mcr_howard(hardware_aware_sdfg(app, b, hw, orders)),
+            rel=1e-6,
+        ), row
+
+
+# ======================================================================
+# stack construction: array-native batch == per-graph construction
+# ======================================================================
+def test_stack_hardware_aware_matches_per_graph_stack():
+    snn = small_app(180, 2000, seed=23)
+    cl = partition_greedy(snn, DYNAP_SE)
+    app = sdfg_from_clusters(cl, hw=DYNAP_SE)
+    rng = np.random.default_rng(5)
+    bindings = [rng.integers(0, DYNAP_SE.n_tiles, size=app.n_actors)
+                for _ in range(6)]
+    orders_list = []
+    for b in bindings:
+        o, _ = build_static_orders(app, b, DYNAP_SE, iterations=6)
+        orders_list.append(o)
+
+    direct = stack_hardware_aware(app, np.array(bindings), DYNAP_SE, orders_list)
+    via_graphs = stack_graphs([
+        hardware_aware_sdfg(app, b, DYNAP_SE, o)
+        for b, o in zip(bindings, orders_list)
+    ])
+    np.testing.assert_allclose(
+        mcr_batch(direct, backend="edges"),
+        mcr_batch(via_graphs, backend="edges"),
+        rtol=1e-9,
+    )
+
+
+def test_stack_accepts_single_binding_and_no_orders():
+    g = random_strongly_connected_sdfg(1, n=5)
+    hw = dataclasses.replace(SMALL_BUF, n_tiles=5)
+    rep = batch_execute(g, np.arange(5), hw)
+    assert rep.periods.shape == (1,)
+    assert rep.periods[0] == pytest.approx(
+        mcr_howard(hardware_aware_sdfg(g, np.arange(5), hw)), rel=1e-6
+    )
+
+
+def test_stack_preserves_app_level_self_edge_delays():
+    """hardware_aware_sdfg keeps self-edge delays; the batched construction
+    must too (regression: base weights once dropped them)."""
+    from repro.core.sdfg import Channel
+
+    channels = [Channel(i, i, 1, 1.0, delay=0.7, kind="self") for i in range(3)]
+    channels += [Channel(0, 1, 0, 1.0), Channel(1, 2, 0, 1.0),
+                 Channel(2, 0, 1, 1.0)]
+    g = SDFG(n_actors=3, exec_time=np.array([1.0, 2.0, 3.0]),
+             channels=channels)
+    hw = dataclasses.replace(SMALL_BUF, n_tiles=3)
+    rep = batch_execute(g, np.arange(3), hw, backend="edges")
+    assert rep.periods[0] == pytest.approx(
+        mcr_howard(hardware_aware_sdfg(g, np.arange(3), hw)), rel=1e-6
+    )
+
+
+def test_stack_rejects_out_of_range_binding():
+    g = random_strongly_connected_sdfg(0, n=4)
+    hw = dataclasses.replace(SMALL_BUF, n_tiles=2)
+    with pytest.raises(AssertionError):
+        batch_execute(g, np.array([0, 1, 2, 0]), hw)
+
+
+def test_steady_period_short_traces_do_not_crash():
+    g = random_strongly_connected_sdfg(1, n=4)
+    hw = dataclasses.replace(SMALL_BUF, n_tiles=4)
+    for iters in (1, 2, 3):
+        trace = SelfTimedExecutor(g, np.arange(4), hw).run(iterations=iters)
+        p = trace.steady_period()
+        assert np.isfinite(p) and p > 0
+
+
+def test_stack_mixed_order_and_orderless_rows():
+    g = random_strongly_connected_sdfg(9, n=6)
+    hw = dataclasses.replace(SMALL_BUF, n_tiles=3)
+    rng = np.random.default_rng(0)
+    bindings = np.stack([rng.integers(0, 3, size=6) for _ in range(3)])
+    orders_list = [None]
+    for b in bindings[1:]:
+        o, _ = build_static_orders(g, b, hw, iterations=6)
+        orders_list.append(o)
+    rep = batch_execute(g, bindings, hw, orders_list, backend="edges")
+    expected = [
+        mcr_howard(hardware_aware_sdfg(g, b, hw, o))
+        for b, o in zip(bindings, orders_list)
+    ]
+    np.testing.assert_allclose(rep.periods, expected, rtol=1e-6)
+
+
+# ======================================================================
+# Eq.-4 recursion: batched matrix + evolution through the kernels
+# ======================================================================
+def test_batched_maxplus_matrix_power_agrees_with_mcr():
+    """On graphs whose tokens are all <= 1 the batched Eq.-4 matrix is
+    exact, so the batched power estimate must converge to the MCR (tail
+    averaging leaves an O(1/window) remainder -> loose tolerance); with
+    multi-token edges it stays a sound upper bound on the period."""
+    graphs = []
+    for s in (3, 4, 5):
+        g = random_strongly_connected_sdfg(s, n=7)
+        t = g.channels
+        graphs.append(SDFG(
+            n_actors=g.n_actors,
+            exec_time=g.exec_time,
+            channels=t.replace(tokens=np.minimum(t.tokens, 1)),
+            name=g.name,
+        ))
+    stack = stack_graphs(graphs)
+    t_mat = maxplus_matrix_batch(stack)
+    _, period_est = evolve_batch(t_mat, iters=400)
+    exact = np.array([mcr_howard(g) for g in graphs])
+    np.testing.assert_allclose(period_est, exact, rtol=0.05)
+
+    # multi-token graphs: conservative (1-token) matrix -> upper bound
+    multi = stack_graphs([random_strongly_connected_sdfg(s, n=7)
+                          for s in (3, 4, 5)])
+    _, est_multi = evolve_batch(maxplus_matrix_batch(multi), iters=200)
+    rho = mcr_batch(multi, backend="edges")
+    assert np.all(est_multi >= rho * (1 - 1e-3))
+
+
+def test_engine_starts_are_admissible_offsets():
+    """Steady-state start offsets: finite, zero-based, and consistent with
+    the max-plus recursion (x stays a fixed point up to the period)."""
+    g = random_strongly_connected_sdfg(11, n=6)
+    hw = dataclasses.replace(SMALL_BUF, n_tiles=6)
+    rep = batch_execute(g, np.arange(6), hw, with_starts=True)
+    assert rep.starts is not None and rep.starts.shape == (1, 6)
+    assert np.isfinite(rep.starts).all()
+    assert rep.starts.min() == 0.0

@@ -7,6 +7,8 @@ import pytest
 
 from repro.core import (
     DYNAP_SE,
+    AdmissionController,
+    AdmissionError,
     HardwareState,
     SelfTimedExecutor,
     analyze_throughput,
@@ -133,6 +135,68 @@ def test_project_order_preserves_relative_order():
     per_tile = project_order(order, binding, 2)
     assert per_tile[0] == [4, 2, 0]
     assert per_tile[1] == [3, 1, 5]
+
+
+def test_admission_controller_lifecycle(compiled):
+    """admit -> evict -> re-admit: tiles cycle back, the design-time
+    artifact cache makes re-admission skip clustering and ordering."""
+    snn, cl, _ = compiled
+    ctl = AdmissionController(DYNAP_SE)
+    art = ctl.register(cl)
+    assert art.design_time_s > 0 and sorted(art.single_order) == list(
+        range(cl.n_clusters)
+    )
+    # registering again is a pure cache hit (same object, no recompute)
+    assert ctl.register(cl) is art
+
+    rep1 = ctl.admit(snn.name, n_tiles_request=2)
+    tiles1 = ctl.running()[snn.name]
+    assert len(tiles1) == 2 and rep1.throughput > 0
+    # double admission of a running app is refused
+    with pytest.raises(AdmissionError, match="already running"):
+        ctl.admit(snn.name)
+
+    freed = ctl.evict(snn.name)
+    assert freed == tiles1
+    assert ctl.running() == {}
+    assert len(ctl.free_tiles()) == DYNAP_SE.n_tiles
+
+    # re-admission: cache hit, no clustering/ordering redone
+    hits_before = art.hits
+    rep2 = ctl.admit(snn.name)
+    assert art.hits > hits_before
+    assert rep2.throughput > 0
+    assert len(ctl.running()[snn.name]) == DYNAP_SE.n_tiles
+
+    kinds = [e.kind for e in ctl.events]
+    assert kinds == ["admit", "reject", "evict", "admit"]
+    assert all(e.cache_hit for e in ctl.events if e.kind == "admit")
+
+
+def test_admission_controller_multi_tenant_and_rejection(compiled):
+    snn, cl, _ = compiled
+    ctl = AdmissionController(DYNAP_SE)
+    other = dataclasses.replace(cl, snn=dataclasses.replace(cl.snn, name="app-b"))
+    ctl.register(cl)
+    ctl.register(other)
+
+    ctl.admit(snn.name, n_tiles_request=2)
+    ctl.admit("app-b", n_tiles_request=2)
+    # chip is full: a third tenant (fresh name) must be rejected and logged
+    third = dataclasses.replace(cl, snn=dataclasses.replace(cl.snn, name="app-c"))
+    with pytest.raises(AdmissionError):
+        ctl.admit(third)
+    assert ctl.events[-1].kind == "reject" and ctl.events[-1].app == "app-c"
+
+    # tenants own disjoint tiles; finishing one frees exactly its tiles
+    run = ctl.running()
+    assert set(run[snn.name]).isdisjoint(run["app-b"])
+    ctl.finish("app-b")
+    assert sorted(ctl.free_tiles()) == sorted(run["app-b"])
+    with pytest.raises(KeyError):
+        ctl.finish("app-b")
+
+    assert ctl.admit("app-c", n_tiles_request=2).throughput > 0
 
 
 def test_more_tiles_scale_throughput():
