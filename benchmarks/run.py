@@ -1,9 +1,10 @@
 """Benchmark entry point: one function per paper table/figure + the LM
 roofline table from dry-run artifacts.  Prints CSV blocks.
 
-  PYTHONPATH=src python -m benchmarks.run            # everything
-  PYTHONPATH=src python -m benchmarks.run fig13      # one benchmark
-  PYTHONPATH=src python -m benchmarks.run admission  # + BENCH_admission.json
+  PYTHONPATH=src python -m benchmarks.run              # everything
+  PYTHONPATH=src python -m benchmarks.run fig13        # one benchmark
+  PYTHONPATH=src python -m benchmarks.run admission    # + BENCH_admission.json
+  PYTHONPATH=src python -m benchmarks.run binding_opt  # + BENCH_binding_opt.json
 
 The design-space sweep benchmark (batched Max-Plus vs per-graph loop)
 lives in its own module:  PYTHONPATH=src python -m benchmarks.sweep
@@ -35,6 +36,16 @@ def main() -> None:
         t0 = time.perf_counter()
         rows, summary, _ = admission.run()
         print(f"\n# admission  ({time.perf_counter() - t0:.1f}s)")
+        for row in rows:
+            print(",".join(str(x) for x in row))
+        print("##", summary)
+
+    if want is None or "binding_opt" in want:
+        from . import binding_opt
+
+        t0 = time.perf_counter()
+        rows, summary, _ = binding_opt.run()
+        print(f"\n# binding_opt  ({time.perf_counter() - t0:.1f}s)")
         for row in rows:
             print(",".join(str(x) for x in row))
         print("##", summary)

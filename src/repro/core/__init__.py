@@ -58,6 +58,12 @@ from .maxplus import (
     throughput,
     throughput_batch,
 )
+from .optimize import (
+    GenerationStat,
+    OptimizeReport,
+    bind_optimized,
+    optimize_binding,
+)
 from .partition import Cluster, ClusteredSNN, partition_greedy
 from .runtime import (
     AdmissionController,

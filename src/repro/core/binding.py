@@ -63,7 +63,18 @@ def bind_ours(
     max_pass: int = 4,
     rng_seed: int = 0,
 ) -> BindingResult:
-    """Eq. 7 load balancing with std-dev-reducing pairwise swaps."""
+    """Eq. 7 load balancing with std-dev-reducing pairwise swaps.
+
+    Swapping clusters i (tile ti, load li) and j (tile tj, load lj) changes
+    the sum of squared tile loads by ``2 (lj - li) (a_i - a_j)`` where
+    ``a_x = tile_load[t_x] - l_x`` is the residual load of x's tile — so
+    one (n, n) outer-product evaluates every candidate swap at once.  Each
+    round applies a greedy batch of improving swaps (deltas re-validated
+    against the live tile loads before each application, preserving the
+    sequential-sweep semantics); ``max_pass`` bounds the rounds.  For very
+    large n the full matrix is replaced by a random pair sample, matching
+    the old sampled-sweep bound.
+    """
     t0 = time.perf_counter()
     loads = _cluster_loads(c, weights, hw)
     n_tiles = hw.n_tiles
@@ -78,32 +89,57 @@ def bind_ours(
     rng = np.random.default_rng(rng_seed)
     n = c.n_clusters
     for _ in range(max_pass):
-        improved = False
-        # sweep cluster pairs; for large n sample pairs (documented bound)
-        if n * n <= 250_000:
-            pairs = [(i, j) for i in range(n) for j in range(i + 1, n)]
-        else:
-            idx = rng.integers(0, n, size=(250_000, 2))
-            pairs = [(int(a), int(b)) for a, b in idx if a != b]
         std = tile_load.std()
+        resid = tile_load[binding] - loads          # (n,) a_x
+        if n * n <= 4_000_000:
+            delta = 2.0 * (loads[None, :] - loads[:, None]) * (
+                resid[:, None] - resid[None, :]
+            )
+            delta[binding[:, None] == binding[None, :]] = 0.0
+            delta = np.triu(delta, k=1)             # (i, j) once, i < j
+            flat = delta.ravel()
+            cand = np.flatnonzero(flat < -1e-12)
+            if cand.size > 4 * n:                   # best 4n swaps per round
+                cand = cand[np.argpartition(flat[cand], 4 * n)[: 4 * n]]
+            cand = cand[np.argsort(flat[cand], kind="stable")]
+            pairs = np.stack([cand // n, cand % n], axis=1)
+        else:                                       # sampled-sweep bound
+            idx = rng.integers(0, n, size=(250_000, 2))
+            delta = 2.0 * (loads[idx[:, 1]] - loads[idx[:, 0]]) * (
+                resid[idx[:, 0]] - resid[idx[:, 1]]
+            )
+            delta[binding[idx[:, 0]] == binding[idx[:, 1]]] = 0.0
+            cand = np.flatnonzero(delta < -1e-12)
+            pairs = idx[cand[np.argsort(delta[cand], kind="stable")]]
+        improved = False
         for i, j in pairs:
             ti, tj = binding[i], binding[j]
             if ti == tj:
                 continue
             li, lj = loads[i], loads[j]
-            new_ti = tile_load[ti] - li + lj
-            new_tj = tile_load[tj] - lj + li
-            delta_sq = (
-                new_ti**2 + new_tj**2 - tile_load[ti] ** 2 - tile_load[tj] ** 2
-            )
-            if delta_sq < -1e-12:  # std reduces iff sum of squares reduces
-                tile_load[ti], tile_load[tj] = new_ti, new_tj
+            # re-validate against the live tile loads (stale deltas skip)
+            if (lj - li) * (tile_load[ti] - li - tile_load[tj] + lj) < -1e-12:
+                tile_load[ti] += lj - li
+                tile_load[tj] += li - lj
                 binding[i], binding[j] = tj, ti
                 improved = True
-        new_std = tile_load.std()
-        if not improved or std - new_std < 1e-12:
+        if not improved or std - tile_load.std() < 1e-12:
             break
     return BindingResult(binding, time.perf_counter() - t0, "ours")
+
+
+def lpt_assign(loads: np.ndarray, n_tiles: int) -> np.ndarray:
+    """Longest-processing-time greedy: heaviest load onto the least-loaded
+    tile.  ``loads`` is (n,) per-cluster load (any unit); returns (n,)
+    int64 tile ids.  Shared by :func:`bind_pycarl` (Eq.-7 loads) and the
+    optimizer's tau-balanced start."""
+    binding = np.empty(loads.size, dtype=np.int64)
+    tile_load = np.zeros(n_tiles)
+    for i in np.argsort(loads, kind="stable")[::-1]:
+        t = int(np.argmin(tile_load))
+        binding[i] = t
+        tile_load[t] += loads[i]
+    return binding
 
 
 def bind_pycarl(
@@ -114,13 +150,7 @@ def bind_pycarl(
 ) -> BindingResult:
     """PyCARL: greedy load balance (LPT), random order downstream."""
     t0 = time.perf_counter()
-    loads = _cluster_loads(c, weights, hw)
-    binding = np.empty(c.n_clusters, dtype=np.int64)
-    tile_load = np.zeros(hw.n_tiles)
-    for i in np.argsort(loads)[::-1]:
-        t = int(np.argmin(tile_load))
-        binding[i] = t
-        tile_load[t] += loads[i]
+    binding = lpt_assign(_cluster_loads(c, weights, hw), hw.n_tiles)
     return BindingResult(binding, time.perf_counter() - t0, "pycarl")
 
 
@@ -130,8 +160,24 @@ def bind_spinemap(
     *,
     max_pass: int = 4,
     rng_seed: int = 0,
+    balance_factor: float = 1.5,
 ) -> BindingResult:
-    """SpiNeMap: minimize inter-tile spikes (KL-style single moves/swaps)."""
+    """SpiNeMap: minimize inter-tile spikes (KL-style single moves).
+
+    The affinity matrix ``W[x, t]`` (spike traffic between cluster x and
+    the clusters currently bound to tile t, shape (n_clusters, n_tiles))
+    makes every move gain a row lookup: moving x from its own tile to t
+    changes the cut by ``W[x, own] - W[x, t]``.  W is built once per
+    binding (one scatter-add over the channel arrays) and updated
+    incrementally per accepted move (O(degree) scatter on x's neighbors),
+    replacing the per-cluster O(E) channel scans — the sequential KL
+    semantics are unchanged.
+
+    Balance cap: a move onto tile t is admitted only while t's accumulated
+    Eq.-7 *load* stays within ``balance_factor`` x the mean tile load
+    (the previous cap bounded cluster *counts*, which let a few heavy
+    clusters pile onto one tile).
+    """
     t0 = time.perf_counter()
     n, n_tiles = c.n_clusters, hw.n_tiles
     rng = np.random.default_rng(rng_seed)
@@ -143,31 +189,37 @@ def bind_spinemap(
     # this already groups communicating clusters together)
     binding = (np.arange(n) * n_tiles // max(n, 1)).astype(np.int64)
 
-    def move_gain(x: int, to: int) -> float:
-        """Reduction in cut spikes when moving cluster x to tile `to`."""
-        own = binding[x]
-        if own == to:
-            return 0.0
-        mask_s = src == x
-        mask_d = dst == x
-        cur = spk[mask_s][binding[dst[mask_s]] != own].sum() + spk[mask_d][
-            binding[src[mask_d]] != own
-        ].sum()
-        new = spk[mask_s][binding[dst[mask_s]] != to].sum() + spk[mask_d][
-            binding[src[mask_d]] != to
-        ].sum()
-        return float(cur - new)
+    # symmetric neighbor lists (both channel directions), CSR by cluster
+    nbr_of = np.concatenate([src, dst])
+    nbrs = np.concatenate([dst, src])
+    wts = np.concatenate([spk, spk])
+    order = np.argsort(nbr_of, kind="stable")
+    nbr_of, nbrs, wts = nbr_of[order], nbrs[order], wts[order]
+    starts = np.searchsorted(nbr_of, np.arange(n), side="left")
+    ends = np.searchsorted(nbr_of, np.arange(n), side="right")
 
-    cap = int(np.ceil(1.5 * n / n_tiles))  # loose balance cap only
-    counts = np.bincount(binding, minlength=n_tiles)
+    # W[x, t] = spike traffic between x and tile t under `binding`
+    aff = np.zeros((n, n_tiles))
+    np.add.at(aff, (nbr_of, binding[nbrs]), wts)
+
+    loads = _cluster_loads(c, LoadWeights(), hw)
+    tile_load = np.bincount(binding, weights=loads, minlength=n_tiles)
+    cap = balance_factor * loads.sum() / n_tiles   # Eq.-7 load cap
     for _ in range(max_pass):
         improved = False
         for x in rng.permutation(n)[: min(n, 2000)]:
-            gains = [(move_gain(int(x), t), t) for t in range(n_tiles)]
-            g, t = max(gains)
-            if g > 1e-9 and counts[t] < cap:
-                counts[binding[x]] -= 1
-                counts[t] += 1
+            own = int(binding[x])
+            gains = aff[x] - aff[x, own]           # cut reduction per tile
+            gains[own] = 0.0
+            t = int(np.argmax(gains))
+            if gains[t] > 1e-9 and tile_load[t] + loads[x] <= cap:
+                e = slice(starts[x], ends[x])
+                np.add.at(aff, (nbrs[e], np.full(ends[x] - starts[x], own)),
+                          -wts[e])
+                np.add.at(aff, (nbrs[e], np.full(ends[x] - starts[x], t)),
+                          wts[e])
+                tile_load[own] -= loads[x]
+                tile_load[t] += loads[x]
                 binding[x] = t
                 improved = True
         if not improved:

@@ -53,21 +53,124 @@ def _as_binding_matrix(bindings, n_actors: int) -> np.ndarray:
     return b
 
 
+def _order_shortcuts(
+    n_actors: int, t, tau: np.ndarray, max_len: int
+) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """Max-plus path-doubling shortcuts along one row's TDMA order cycles.
+
+    The order edges of a row form disjoint per-tile cycles (a functional
+    graph on the ordered actors), which makes them the *diameter* of the
+    hardware-aware graph: plain Bellman-Ford needs O(cycle length) rounds
+    to move information around a tile.  This emits, for span ``s = 2, 4,
+    8, … < max_len``, one composed edge per ordered actor with ``weight`` /
+    ``tokens`` equal to the SUM along the underlying span-``s`` path.  Each
+    shortcut is the max-plus composition of a real path, so every cycle
+    through shortcuts corresponds to a closed walk of the original graph
+    with identical weight and token sums — the maximum cycle ratio is
+    *exactly* preserved while relaxation reaches across a length-k cycle
+    in O(log k) rounds.
+
+    Returns ``(src, dst, tokens, weights)`` arrays of the shortcut edges
+    (possibly empty).  NOT valid as Eq.-4 dependencies: a multi-token
+    shortcut is a *relaxed* multi-iteration dependency, so these edges
+    must never feed :func:`~.maxplus.maxplus_matrix_batch`.
+    """
+    nodes = t.src
+    k = nodes.size
+    if k < 4 or max_len < 4:
+        empty = np.array([], dtype=np.int64)
+        return empty, empty, empty, np.array([], dtype=np.float64)
+    inv = np.full(n_actors, -1, dtype=np.int64)
+    inv[nodes] = np.arange(k)
+    nx = inv[t.dst]                      # successor, as an index into nodes
+    w = tau[t.dst].astype(np.float64)    # span-1 path weight
+    m = t.tokens.astype(np.int64)        # span-1 token sum
+    srcs, dsts, toks, ws = [], [], [], []
+    span = 1
+    while 2 * span < max_len:
+        w = w + w[nx]
+        m = m + m[nx]
+        nx = nx[nx]
+        span *= 2
+        srcs.append(nodes)
+        dsts.append(nodes[nx])
+        toks.append(m.copy())
+        ws.append(w.copy())
+    if not srcs:
+        empty = np.array([], dtype=np.int64)
+        return empty, empty, empty, np.array([], dtype=np.float64)
+    return (
+        np.concatenate(srcs),
+        np.concatenate(dsts),
+        np.concatenate(toks),
+        np.concatenate(ws),
+    )
+
+
+def order_cycle_lower_bounds(
+    tau: np.ndarray,
+    bindings: np.ndarray,
+    orders_list: Optional[Sequence[Optional[Sequence[Sequence[int]]]]],
+) -> Optional[np.ndarray]:
+    """(B,) sound per-row lower bounds on the steady-state period.
+
+    Every tile whose static order serializes >= 2 actors contributes a real
+    cycle (the TDMA order cycle, one token on the wrap-around edge) whose
+    ratio is the sum of its actors' execution times ``tau`` (time units of
+    ``tau``, microseconds here).  The row bound is the max over tiles;
+    rows without orders get ``-inf``.  Feeding this into
+    :func:`~.maxplus.mcr_batch` (``lo0``) shrinks the bisection interval —
+    in the paper's compute-bound regime (Table 2) it is usually within a
+    few percent of the true period.  Returns None when no row has orders.
+    """
+    if orders_list is None:
+        return None
+    n_b = bindings.shape[0]
+    lo0 = np.full(n_b, -np.inf)
+    any_orders = False
+    for row, orders in enumerate(orders_list):
+        if orders is None:
+            continue
+        any_orders = True
+        best = -np.inf
+        binding = bindings[row]
+        for tile, order in enumerate(orders):
+            members = [a for a in order if binding[a] == tile]
+            if len(members) > 1:
+                best = max(best, float(tau[np.asarray(members)].sum()))
+        lo0[row] = best
+    return lo0 if any_orders else None
+
+
 def stack_hardware_aware(
     app: SDFG,
     bindings,
     hw: HardwareConfig,
     orders_list: Optional[Sequence[Optional[Sequence[Sequence[int]]]]] = None,
+    *,
+    relax_shortcuts: bool = False,
 ) -> EdgeStack:
     """Hardware-aware graphs of B candidate bindings as ONE EdgeStack.
 
-    ``bindings`` is (B, n_actors) (a single (n,) binding is promoted);
+    ``bindings`` is (B, n_actors) int (a single (n,) binding is promoted);
     ``orders_list`` optionally gives per-candidate static orders (entries
     may be None for order-free candidates).  Self-edges, flow edges and
     buffer back-edges share src/dst/tokens across rows — only flow delays
     (NoC hops of each candidate's binding) and the order-edge slots differ.
     Order-edge slots are padded to the batch maximum with ``-inf`` weight,
     the (max,+) neutral element, so padding never joins a longest path.
+
+    ``relax_shortcuts=True`` additionally emits path-doubling shortcut
+    edges along each row's order cycles (:func:`_order_shortcuts`): the
+    maximum cycle ratio — and therefore every period computed by
+    :func:`~.maxplus.mcr_batch` — is exactly preserved, while Bellman-Ford
+    relaxation converges in O(log cycle-length) instead of O(cycle-length)
+    rounds.  Stacks built this way are for cycle-ratio analysis ONLY; do
+    not pass them to :func:`~.maxplus.maxplus_matrix_batch`.
+
+    Returns an :class:`~.maxplus.EdgeStack` with (B, E) arrays; weights
+    carry ``tau[dst] + delay`` in the time unit of ``app.exec_time``
+    (microseconds throughout this pipeline).
     """
     bindings = _as_binding_matrix(bindings, app.n_actors)
     n_b = bindings.shape[0]
@@ -96,15 +199,28 @@ def stack_hardware_aware(
     ))[None, :].repeat(n_b, axis=0)
     base_w[:, keep_self.src.size : keep_self.src.size + ef] += delays
 
-    # per-row order edges (variable count), padded to the batch maximum
-    order_tables = []
+    # per-row order edges (+ optional shortcuts), padded to the batch max
+    order_rows: list[Optional[tuple]] = []
     if orders_list is not None:
         for row, orders in enumerate(orders_list):
-            order_tables.append(
-                order_edges(orders, bindings[row]) if orders is not None
-                else None
-            )
-    eo = max((len(t) for t in order_tables if t is not None), default=0)
+            if orders is None:
+                order_rows.append(None)
+                continue
+            t = order_edges(orders, bindings[row])
+            o_src, o_dst = t.src, t.dst
+            o_tok, o_w = t.tokens, tau[t.dst]
+            if relax_shortcuts and len(t):
+                max_len = int(np.bincount(bindings[row]).max(initial=0))
+                s_src, s_dst, s_tok, s_w = _order_shortcuts(
+                    app.n_actors, t, tau, max_len
+                )
+                if s_src.size:
+                    o_src = np.concatenate([o_src, s_src])
+                    o_dst = np.concatenate([o_dst, s_dst])
+                    o_tok = np.concatenate([o_tok, s_tok])
+                    o_w = np.concatenate([o_w, s_w])
+            order_rows.append((o_src, o_dst, o_tok, o_w))
+    eo = max((r[0].size for r in order_rows if r is not None), default=0)
 
     src = np.zeros((n_b, e0 + eo), dtype=np.int64)
     dst = np.zeros((n_b, e0 + eo), dtype=np.int64)
@@ -114,14 +230,15 @@ def stack_hardware_aware(
     dst[:, :e0] = base_dst
     tokens[:, :e0] = base_tok
     weights[:, :e0] = base_w
-    for row, t in enumerate(order_tables):
-        if t is None or not len(t):
+    for row, r in enumerate(order_rows):
+        if r is None or not r[0].size:
             continue
-        k = len(t)
-        src[row, e0 : e0 + k] = t.src
-        dst[row, e0 : e0 + k] = t.dst
-        tokens[row, e0 : e0 + k] = t.tokens
-        weights[row, e0 : e0 + k] = tau[t.dst]
+        o_src, o_dst, o_tok, o_w = r
+        k = o_src.size
+        src[row, e0 : e0 + k] = o_src
+        dst[row, e0 : e0 + k] = o_dst
+        tokens[row, e0 : e0 + k] = o_tok
+        weights[row, e0 : e0 + k] = o_w
     return EdgeStack(
         n_actors=app.n_actors, src=src, dst=dst, tokens=tokens, weights=weights
     )
@@ -135,19 +252,24 @@ class EngineReport:
     """Batched self-timed analysis of B candidate configurations.
 
     ``periods[b]`` is candidate b's steady-state iteration period (the MCR
-    of its order-augmented event graph); ``starts``, when requested, holds
-    per-actor steady-state start-time offsets from the max-plus recursion
-    (normalized so each row's earliest actor starts at 0) — the static
-    schedule the paper's Eq. 4 evolution converges to.
+    of its order-augmented event graph) in the model's time unit
+    (microseconds, see :mod:`repro.core.hardware`); ``starts``, when
+    requested, holds per-actor steady-state start-time offsets from the
+    max-plus recursion (normalized so each row's earliest actor starts at
+    0) — the static schedule the paper's Eq. 4 evolution converges to.
+    ``build_time_s`` / ``analysis_time_s`` are wall-clock seconds of the
+    EdgeStack build and the batched analysis.
     """
 
-    periods: np.ndarray                 # (B,)
-    starts: Optional[np.ndarray]        # (B, n_actors) or None
+    periods: np.ndarray                 # (B,) microseconds of model time
+    starts: Optional[np.ndarray]        # (B, n_actors) microseconds, or None
     build_time_s: float
     analysis_time_s: float
 
     @property
     def throughputs(self) -> np.ndarray:
+        """(B,) iterations per microsecond (1/period); 0.0 for dead or
+        acyclic rows (non-finite or non-positive period)."""
         ok = np.isfinite(self.periods) & (self.periods > 0)
         out = np.zeros_like(self.periods)
         out[ok] = 1.0 / self.periods[ok]
@@ -155,6 +277,7 @@ class EngineReport:
 
     @property
     def n_candidates(self) -> int:
+        """Number of candidate configurations B in this batch."""
         return int(self.periods.size)
 
 
@@ -171,17 +294,32 @@ def batch_execute(
 ) -> EngineReport:
     """Self-timed steady state of every candidate, in one batched pass.
 
+    ``bindings`` is (B, n_actors) int tile ids (a single (n,) binding is
+    promoted to B=1); the result's ``periods`` is (B,) in the time unit of
+    ``app.exec_time`` (microseconds here) and ``starts`` — when requested —
+    is (B, n_actors) steady-state start offsets in the same unit.
+
     Replaces the per-candidate heapq simulation loop: periods come from the
-    batched lambda-search over the stacked edge arrays; start-time vectors
-    (optional — they cost a dense (B, n, n) matrix build) from iterating
-    ``x(k) = A (x) x(k-1)`` through the batched semiring kernels.
+    batched lambda-search over the stacked edge arrays (order-cycle
+    shortcuts + per-row order-cycle lower bounds keep the search fast on
+    large graphs; both are exact), and start-time vectors (optional — they
+    cost a dense (B, n, n) matrix build) from iterating ``x(k) = A (x)
+    x(k-1)`` through the batched semiring kernels.  ``rel_tol`` is the
+    period's relative tolerance: 1e-8 for exact comparisons, looser (1e-4)
+    when only ranking candidates matters.
     """
+    bindings = _as_binding_matrix(bindings, app.n_actors)
     t0 = time.perf_counter()
-    stack = stack_hardware_aware(app, bindings, hw, orders_list)
+    # shortcut edges preserve every cycle ratio but are NOT Eq.-4
+    # dependencies, so the starts path must build the plain stack
+    stack = stack_hardware_aware(
+        app, bindings, hw, orders_list, relax_shortcuts=not with_starts
+    )
     t_build = time.perf_counter() - t0
 
     t1 = time.perf_counter()
-    periods = mcr_batch(stack, backend=backend, rel_tol=rel_tol)
+    lo0 = order_cycle_lower_bounds(app.exec_time, bindings, orders_list)
+    periods = mcr_batch(stack, backend=backend, rel_tol=rel_tol, lo0=lo0)
     starts = None
     if with_starts:
         t_mat = maxplus_matrix_batch(stack)

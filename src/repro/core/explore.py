@@ -32,16 +32,22 @@ from .binding import bind_ours, bind_pycarl, bind_spinemap, cut_spikes
 from .engine import batch_throughputs
 from .hardware import DYNAP_SE, CrossbarConfig, HardwareConfig, TileConfig
 from .maxplus import mcr_batch, mcr_howard, stack_graphs, throughput_batch
+from .optimize import bind_optimized
 from .partition import ClusteredSNN, partition_greedy
 from .runtime import project_order
 from .schedule import build_static_orders
 from .sdfg import SDFG, hardware_aware_sdfg, sdfg_from_clusters
 from .snn import SNN
 
+#: Binding strategies by name: the paper's three §4.2/§6.3 heuristics plus
+#: the throughput-in-the-loop optimizer (:mod:`repro.core.optimize`).  All
+#: share the ``(clustered, hw, **kwargs) -> BindingResult`` signature, so
+#: :func:`sweep` / :func:`build_candidates` / admission treat them alike.
 BINDERS: dict[str, Callable] = {
     "ours": bind_ours,
     "pycarl": bind_pycarl,
     "spinemap": bind_spinemap,
+    "optimized": bind_optimized,
 }
 
 
@@ -74,15 +80,19 @@ class SweepReport:
 
     @property
     def n_candidates(self) -> int:
+        """Number of evaluated (app, crossbar, tiles, binder) points."""
         return len(self.points)
 
     def best(self, app: str) -> SweepPoint:
+        """Highest-throughput sweep point of ``app`` (throughput in
+        iterations per microsecond of model time)."""
         mine = [p for p in self.points if p.app == app]
         if not mine:
             raise KeyError(f"no sweep points for app {app!r}")
         return max(mine, key=lambda p: p.throughput)
 
     def rows(self) -> list[tuple]:
+        """CSV-ready rows (header + one tuple per sweep point)."""
         out: list[tuple] = [
             ("app", "crossbar", "tiles", "binder", "clusters",
              "throughput", "cut_spikes")
@@ -260,9 +270,12 @@ def candidate_subsets(
 class SubsetScores:
     """Batched scoring of candidate tile subsets (admission helper).
 
-    ``binding``/``virt_orders`` are the *virtual* (k-tile) binding and the
-    Lemma-1 projected per-tile orders — computed once, reusable by the
-    caller so admission doesn't bind or project twice.
+    ``subsets[i]`` is a k-tuple of physical tile ids scored by
+    ``throughputs[i]`` (iterations per microsecond; shape (len(subsets),)).
+    ``binding``/``virt_orders`` are the *virtual* (k-tile) binding
+    ((n_clusters,) ids in [0, k)) and the Lemma-1 projected per-tile
+    orders — computed once, reusable by the caller so admission doesn't
+    bind or project twice.
     """
 
     subsets: list[tuple[int, ...]]
@@ -272,6 +285,7 @@ class SubsetScores:
 
     @property
     def best(self) -> tuple[int, ...]:
+        """The physical tile ids of the highest-throughput subset."""
         return self.subsets[int(np.argmax(self.throughputs))]
 
 

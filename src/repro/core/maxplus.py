@@ -343,6 +343,50 @@ def stack_graphs(graphs: Sequence[SDFG]) -> EdgeStack:
     return EdgeStack(n_actors=n, src=src, dst=dst, tokens=tokens, weights=weights)
 
 
+def _bisection_bounds(
+    stack: EdgeStack, upper: np.ndarray, lo0: Optional[np.ndarray]
+) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Shared lambda-search bootstrap for both mcr backends.
+
+    Returns ``(lo, hi, has_cycle)``: the per-row lower bound from one-token
+    self-loop cycles folded with the caller's sound ``lo0`` bounds, the
+    bisection interval top ``max(upper, lo) + 1``, and which rows are
+    already known to contain a cycle.
+    """
+    finite = np.isfinite(stack.weights)
+    self_loop = finite & (stack.src == stack.dst) & (stack.tokens > 0)
+    ratio = np.where(self_loop, stack.weights / np.maximum(stack.tokens, 1), NEG_INF)
+    lo = np.maximum(ratio.max(axis=1, initial=NEG_INF), 0.0)
+    has_cycle = ratio.max(axis=1, initial=NEG_INF) > NEG_INF
+    if lo0 is not None:
+        lo0 = np.asarray(lo0, dtype=np.float64)
+        lo = np.maximum(lo, np.where(np.isfinite(lo0), lo0, NEG_INF))
+        has_cycle |= np.isfinite(lo0)
+    hi = np.maximum(upper, lo) + 1.0
+    return lo, hi, has_cycle
+
+
+def _upper_path_bound(
+    stack: EdgeStack,
+    order: np.ndarray,
+    uniq_keys: np.ndarray,
+    seg_starts: np.ndarray,
+) -> np.ndarray:
+    """(B,) sound upper bound on any simple-path (hence cycle) weight.
+
+    A simple path or cycle enters each node at most once, so its weight is
+    bounded by the per-row sum over nodes of the (positive part of the)
+    heaviest incoming edge.  Much tighter than summing every positive edge
+    weight when the average in-degree is high, which shrinks both the
+    bisection interval and the distance threshold that detects a pumping
+    positive cycle.
+    """
+    b, n = stack.n_graphs, stack.n_actors
+    max_in = np.full(b * n, NEG_INF)
+    max_in[uniq_keys] = np.maximum.reduceat(stack.weights.ravel()[order], seg_starts)
+    return np.clip(max_in.reshape(b, n), 0.0, None).sum(axis=1)
+
+
 def _positive_cycle_masks(
     stack: EdgeStack,
     lam: np.ndarray,
@@ -395,6 +439,7 @@ def mcr_batch(
     rel_tol: float = 1e-8,
     max_steps: int = 80,
     backend: str = "auto",
+    lo0: Optional[np.ndarray] = None,
 ) -> np.ndarray:
     """Maximum cycle ratio for every row of an :class:`EdgeStack`.
 
@@ -402,6 +447,13 @@ def mcr_batch(
     ``lam < rho_max`` — all rows bisect together.  Inputs must be live
     graphs (a zero-token cycle drives the result to the upper bound instead
     of ``inf``); every graph built by this pipeline is live by construction.
+
+    Returns a ``(B,)`` float64 array of cycle ratios in the same time unit
+    as ``stack.weights`` (microseconds throughout this pipeline);
+    ``-inf`` marks an acyclic row.  ``lo0``, when given, is a ``(B,)``
+    per-row *sound lower bound* on the cycle ratio (the ratio of any cycle
+    the caller knows exists — e.g. a TDMA order cycle's compute sum); it
+    shrinks the bisection interval and never changes the result.
 
     ``backend``: ``"edges"`` (numpy float64, exact — default off-TPU),
     ``"dense"`` (Pallas/jnp max-plus matrix squaring, float32), or
@@ -413,23 +465,13 @@ def mcr_batch(
         # float32 squaring can't resolve below ~1e-4 relative; honor a
         # caller-requested looser tolerance but clamp tighter requests
         return _mcr_batch_dense(
-            stack, max_steps=max_steps, rel_tol=max(rel_tol, 1e-4)
+            stack, max_steps=max_steps, rel_tol=max(rel_tol, 1e-4), lo0=lo0
         )
     assert backend == "edges", backend
 
     b, n, e = stack.n_graphs, stack.n_actors, stack.n_edges
     if e == 0:
         return np.full(b, NEG_INF)
-    finite = np.isfinite(stack.weights)
-    wpos = np.where(finite & (stack.weights > 0), stack.weights, 0.0)
-    upper = wpos.sum(axis=1)
-    hi = upper + 1.0
-
-    # every actor's one-token self-edge is itself a cycle: a safe lower bound
-    self_loop = finite & (stack.src == stack.dst) & (stack.tokens > 0)
-    ratio = np.where(self_loop, stack.weights / np.maximum(stack.tokens, 1), NEG_INF)
-    lo = np.maximum(ratio.max(axis=1, initial=NEG_INF), 0.0)
-    has_cycle = ratio.max(axis=1, initial=NEG_INF) > NEG_INF
 
     # flat batched CSR over (row, dst): segment-max targets, computed once
     rows = np.arange(b, dtype=np.int64)[:, None]
@@ -437,6 +479,9 @@ def mcr_batch(
     flat_dst = (rows * n + stack.dst).ravel()
     order = np.argsort(flat_dst, kind="stable")
     uniq_keys, seg_starts = np.unique(flat_dst[order], return_index=True)
+
+    upper = _upper_path_bound(stack, order, uniq_keys, seg_starts)
+    lo, hi, has_cycle = _bisection_bounds(stack, upper, lo0)
 
     for _ in range(max_steps):
         tol = rel_tol * np.maximum(1.0, np.abs(hi))
@@ -466,7 +511,11 @@ def _on_tpu() -> bool:
 
 
 def _mcr_batch_dense(
-    stack: EdgeStack, *, max_steps: int = 60, rel_tol: float = 1e-4
+    stack: EdgeStack,
+    *,
+    max_steps: int = 60,
+    rel_tol: float = 1e-4,
+    lo0: Optional[np.ndarray] = None,
 ) -> np.ndarray:
     """Dense-kernel lambda-search: positive-cycle detection by max-plus
     matrix squaring through :func:`repro.kernels.ops.maxplus_bmm`.
@@ -481,13 +530,11 @@ def _mcr_batch_dense(
 
     b, n = stack.n_graphs, stack.n_actors
     finite = np.isfinite(stack.weights)
+    # loose positive-weight-sum upper bound: the float32 squaring path
+    # saturates long before a per-node bound would pay off
     wpos = np.where(finite & (stack.weights > 0), stack.weights, 0.0)
     upper = wpos.sum(axis=1)
-    hi = upper + 1.0
-    self_loop = finite & (stack.src == stack.dst) & (stack.tokens > 0)
-    ratio = np.where(self_loop, stack.weights / np.maximum(stack.tokens, 1), NEG_INF)
-    lo = np.maximum(ratio.max(axis=1, initial=NEG_INF), 0.0)
-    has_cycle = ratio.max(axis=1, initial=NEG_INF) > NEG_INF
+    lo, hi, has_cycle = _bisection_bounds(stack, upper, lo0)
 
     rows = np.arange(b, dtype=np.int64)[:, None]
     flat = (rows * n * n + stack.dst * n + stack.src).ravel()

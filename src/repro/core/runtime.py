@@ -43,17 +43,24 @@ from .snn import SNN
 
 @dataclasses.dataclass
 class CompileReport:
-    """One compiled application: binding + schedules + predicted throughput."""
+    """One compiled application: binding + schedules + predicted throughput.
+
+    ``binding`` is (n_clusters,) int tile ids; ``orders[t]`` is tile t's
+    static firing order (cluster ids); ``throughput`` is iterations per
+    microsecond of model time (1 / steady-state period); the ``*_time_s``
+    fields are wall-clock seconds of the compilation steps.
+    """
 
     app: str
-    binding: np.ndarray
-    orders: list[list[int]]
-    throughput: float
+    binding: np.ndarray          # (n_clusters,) int64 tile ids
+    orders: list[list[int]]      # per-tile static orders (cluster ids)
+    throughput: float            # iterations / microsecond of model time
     bind_time_s: float
     schedule_time_s: float
 
     @property
     def compile_time_s(self) -> float:
+        """Total wall-clock compile seconds (binding + scheduling)."""
         return self.bind_time_s + self.schedule_time_s
 
 
@@ -68,6 +75,15 @@ def design_time_compile(
     weights: LoadWeights = LoadWeights(),
     sim_iterations: int = 12,
 ) -> CompileReport:
+    """Full §4 design-time flow: bind, build per-tile static orders, and
+    analyze throughput.
+
+    ``binder`` is any :data:`~repro.core.explore.BINDERS`-style strategy
+    (``(clustered, hw, **kw) -> BindingResult``); ``sim_iterations`` is the
+    FCFS self-timed horizon used to record the static orders (§4.4 step 2).
+    Returns a :class:`CompileReport` (binding (n_clusters,), per-tile
+    orders, throughput in iterations per microsecond).
+    """
     app = sdfg_from_clusters(clustered, hw=hw)
     try:
         bres: BindingResult = binder(clustered, hw, weights=weights)
@@ -136,10 +152,12 @@ class HardwareState:
     allocated: dict[str, list[int]] = dataclasses.field(default_factory=dict)
 
     def free_tiles(self) -> list[int]:
+        """Sorted physical tile ids not allocated to any running app."""
         used = {t for tiles in self.allocated.values() for t in tiles}
         return [t for t in range(self.hw.n_tiles) if t not in used]
 
     def release(self, app: str) -> None:
+        """Free ``app``'s tiles (no-op when the app is not running)."""
         self.allocated.pop(app, None)
 
 
@@ -151,11 +169,15 @@ def runtime_admit(
     n_tiles_request: Optional[int] = None,
     weights: LoadWeights = LoadWeights(),
     tile_selection: str = "batched",
+    optimize_budget: Optional[tuple[int, int]] = None,
 ) -> CompileReport:
     """Admit an application onto the currently-free tiles (Fig. 11).
 
     Binding runs on the free-tile subset; per-tile schedules are *projected*
     from the design-time single-tile order (no construction from scratch).
+    Returns a :class:`CompileReport` whose ``binding`` is (n_clusters,)
+    physical tile ids and whose ``throughput`` is 1/period (per
+    microsecond of model time).
 
     When ``n_tiles_request`` asks for fewer tiles than are free, the
     candidate k-subsets of the free tiles are scored in one batched
@@ -164,6 +186,15 @@ def runtime_admit(
     best-throughput subset wins; ``tile_selection="first"`` keeps the old
     first-k-free behaviour.  Requesting more tiles than are free raises
     :class:`AdmissionError` instead of silently binding to fewer.
+
+    ``optimize_budget`` is the admission-time quality/latency knob: a
+    ``(generations, population)`` pair that refines the heuristic binding
+    with the throughput-in-the-loop optimizer
+    (:func:`repro.core.optimize.optimize_binding`) on the chosen tile
+    subset before projection.  The heuristic binding is one of the
+    optimizer's seeds, so the refined admission is never worse; cost grows
+    roughly linearly with ``generations x population``.  ``None`` (the
+    default) keeps the plain heuristic path.
     """
     free = state.free_tiles()
     if not free:
@@ -204,10 +235,32 @@ def runtime_admit(
     else:
         sub_hw = dataclasses.replace(state.hw, n_tiles=len(free))
         virt_binding = bind_ours(clustered, sub_hw, weights=weights).binding
+    refined = False
+    if optimize_budget is not None:
+        from .optimize import optimize_binding
+
+        gens, pop = optimize_budget
+        # optimize over the PHYSICAL free-tile ids (allowed_tiles), so the
+        # search sees the subset's real NoC distances; the heuristic
+        # binding — relabeled physically — seeds the final exact pool,
+        # which makes the refined admission never worse than the plain one
+        phys_seed = np.array([free[t] for t in virt_binding], dtype=np.int64)
+        phys_opt = optimize_binding(
+            clustered, state.hw,
+            single_order=single_order,
+            generations=gens, population=pop,
+            weights=weights, allowed_tiles=free,
+            extra_seeds=[phys_seed],
+        ).binding
+        to_virt = {p: v for v, p in enumerate(free)}
+        virt_binding = np.array(
+            [to_virt[int(t)] for t in phys_opt], dtype=np.int64
+        )
+        refined = True
     t_bind = time.perf_counter() - t0
 
     t1 = time.perf_counter()
-    if scores is not None:
+    if scores is not None and not refined:
         sub_orders = scores.virt_orders
     else:
         sub_orders = project_order(single_order, virt_binding, len(free))
@@ -306,12 +359,16 @@ class AdmissionController:
         weights: LoadWeights = LoadWeights(),
         tile_selection: str = "batched",
         sim_iterations: int = 8,
+        optimize_budget: Optional[tuple[int, int]] = None,
     ):
         self.hw = hw
         self.state = HardwareState(hw)
         self.weights = weights
         self.tile_selection = tile_selection
         self.sim_iterations = sim_iterations
+        # (generations, population) for throughput-in-the-loop refinement
+        # of every admission's binding; None = heuristic-only (fastest)
+        self.optimize_budget = optimize_budget
         self.artifacts: dict[tuple[str, HardwareConfig], DesignArtifact] = {}
         self.reports: dict[str, CompileReport] = {}
         self.events: list[AdmissionEvent] = []
@@ -399,6 +456,7 @@ class AdmissionController:
                 n_tiles_request=n_tiles_request,
                 weights=self.weights,
                 tile_selection=self.tile_selection,
+                optimize_budget=self.optimize_budget,
             )
         except AdmissionError:
             self.events.append(AdmissionEvent(
@@ -440,9 +498,11 @@ class AdmissionController:
 
     # -- introspection --------------------------------------------------
     def running(self) -> dict[str, list[int]]:
+        """Currently-admitted apps -> sorted physical tile ids they hold."""
         return {a: sorted(t) for a, t in self.state.allocated.items()}
 
     def free_tiles(self) -> list[int]:
+        """Sorted physical tile ids currently available for admission."""
         return self.state.free_tiles()
 
     def trajectory(self) -> list[dict]:

@@ -1,0 +1,62 @@
+"""Public-API documentation contract.
+
+Every public callable of the engine / exploration / runtime / optimizer
+layers must carry a docstring (the architecture pass documents array shapes
+and units there — see docs/ARCHITECTURE.md).  Public = not underscore-
+prefixed and defined in the module itself (re-exports are checked where
+they are defined).
+"""
+
+import inspect
+
+import repro.core.engine
+import repro.core.explore
+import repro.core.optimize
+import repro.core.runtime
+
+MODULES = (
+    repro.core.engine,
+    repro.core.explore,
+    repro.core.optimize,
+    repro.core.runtime,
+)
+
+
+def _public_callables(mod):
+    for name in dir(mod):
+        if name.startswith("_"):
+            continue
+        obj = getattr(mod, name)
+        if not (inspect.isfunction(obj) or inspect.isclass(obj)):
+            continue
+        if getattr(obj, "__module__", None) != mod.__name__:
+            continue  # re-export; documented at its definition site
+        yield name, obj
+
+
+def _public_methods(cls):
+    for name, obj in vars(cls).items():
+        if name.startswith("_"):
+            continue
+        if isinstance(obj, property):
+            yield name, obj.fget
+        elif inspect.isfunction(obj):
+            yield name, obj
+
+
+def test_module_docstrings():
+    for mod in MODULES:
+        assert mod.__doc__ and mod.__doc__.strip(), mod.__name__
+
+
+def test_public_callables_have_docstrings():
+    missing = []
+    for mod in MODULES:
+        for name, obj in _public_callables(mod):
+            if not (obj.__doc__ and obj.__doc__.strip()):
+                missing.append(f"{mod.__name__}.{name}")
+            if inspect.isclass(obj):
+                for mname, meth in _public_methods(obj):
+                    if not (meth.__doc__ and meth.__doc__.strip()):
+                        missing.append(f"{mod.__name__}.{name}.{mname}")
+    assert not missing, f"public callables without docstrings: {missing}"

@@ -1,0 +1,205 @@
+"""Throughput-in-the-loop binding optimizer: invariants, batching contract,
+registry/admission integration, and the SpiNeMap load-cap regression."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+import repro.core.engine as engine_mod
+from repro.core import (
+    APP_NAMES,
+    DYNAP_SE,
+    AdmissionController,
+    HardwareState,
+    bind_optimized,
+    bind_ours,
+    bind_spinemap,
+    build_app,
+    optimize_binding,
+    partition_greedy,
+    runtime_admit,
+    single_tile_order,
+    small_app,
+    sweep,
+)
+from repro.core.binding import BindingResult, LoadWeights, _cluster_loads, cut_spikes
+from repro.core.explore import BINDERS
+from repro.core.partition import ClusteredSNN
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    snn = small_app(260, 3200, seed=31)
+    return partition_greedy(snn, DYNAP_SE)
+
+
+# ======================================================================
+# optimizer invariants
+# ======================================================================
+def test_optimized_never_worse_than_seeds_on_standard_apps():
+    """Acceptance invariant: on every Table-1 app, the optimized binding's
+    exact period is <= every heuristic seed's (the seeds are in the final
+    exact scoring pool, so this holds by construction)."""
+    rng = np.random.default_rng(2024)
+    for name in APP_NAMES:
+        cl = partition_greedy(build_app(name), DYNAP_SE)
+        rep = optimize_binding(
+            cl, DYNAP_SE, population=16, generations=2, elite=4,
+            rng_seed=int(rng.integers(0, 2**31)),
+        )
+        assert rep.period <= rep.best_seed_period * (1 + 1e-9), name
+        assert rep.period <= min(rep.seed_periods.values()) * (1 + 1e-9), name
+        assert rep.throughput > 0, name
+        assert rep.binding.shape == (cl.n_clusters,)
+        assert rep.binding.min() >= 0 and rep.binding.max() < DYNAP_SE.n_tiles
+
+
+def test_optimizer_deterministic_under_fixed_seed(tiny):
+    a = optimize_binding(tiny, DYNAP_SE, population=24, generations=3, rng_seed=7)
+    b = optimize_binding(tiny, DYNAP_SE, population=24, generations=3, rng_seed=7)
+    np.testing.assert_array_equal(a.binding, b.binding)
+    assert a.period == b.period
+    assert [h.best_period for h in a.history] == [h.best_period for h in b.history]
+
+
+def test_optimizer_improves_on_mlp():
+    """MLP-MNIST has real headroom over the Eq.-7 heuristics; the default
+    budget must find a strictly better binding (regression guard on the
+    guided mutations)."""
+    cl = partition_greedy(build_app("MLP-MNIST"), DYNAP_SE)
+    rep = optimize_binding(cl, DYNAP_SE, population=64, generations=6, rng_seed=0)
+    assert rep.improvement > 1e-4
+    assert rep.period < rep.best_seed_period
+
+
+# ======================================================================
+# batching contract: one EdgeStack build per generation (+ final rescore)
+# ======================================================================
+def test_one_stack_build_per_generation(tiny, monkeypatch):
+    calls = []
+    real = engine_mod.stack_hardware_aware
+
+    def counting(app, bindings, hw, orders_list=None, **kw):
+        b = np.asarray(bindings)
+        calls.append(1 if b.ndim == 1 else b.shape[0])
+        return real(app, bindings, hw, orders_list, **kw)
+
+    monkeypatch.setattr(engine_mod, "stack_hardware_aware", counting)
+    gens, pop = 4, 24
+    rep = optimize_binding(tiny, DYNAP_SE, population=pop, generations=gens,
+                           rng_seed=1)
+    # one build per generation plus exactly one final exact re-score
+    assert len(calls) == gens + 1
+    assert rep.n_stack_builds == gens + 1
+    # every generation scores the whole population in its single build
+    assert all(c == pop for c in calls[:gens])
+
+
+# ======================================================================
+# integration: BINDERS registry, sweep, admission knob
+# ======================================================================
+def test_bind_optimized_registered_and_sweepable(tiny):
+    assert BINDERS["optimized"] is bind_optimized
+    res = bind_optimized(tiny, DYNAP_SE, population=12, generations=2)
+    assert isinstance(res, BindingResult)
+    assert res.strategy == "optimized"
+
+    report = sweep(
+        [tiny.snn], tile_counts=(4,), binders=("ours", "optimized"),
+    )
+    pts = {p.binder: p for p in report.points}
+    assert set(pts) == {"ours", "optimized"}
+    assert pts["optimized"].throughput > 0
+    # NOTE: the sweep re-scores the binding under freshly built FCFS
+    # static orders, not the Lemma-1 projection the optimizer optimized
+    # against, so "never worse" is only structural inside optimize_binding
+    # (tested above); here we only guard against gross regressions.
+    assert pts["optimized"].throughput >= pts["ours"].throughput * 0.9
+
+
+def test_runtime_admit_optimize_budget(tiny):
+    order, _ = single_tile_order(tiny, DYNAP_SE)
+    plain = runtime_admit(tiny, HardwareState(DYNAP_SE), order,
+                          n_tiles_request=2)
+    tuned = runtime_admit(tiny, HardwareState(DYNAP_SE), order,
+                          n_tiles_request=2, optimize_budget=(2, 12))
+    # heuristic binding is a seed of the refinement: never worse
+    assert tuned.throughput >= plain.throughput * (1 - 1e-6)
+    assert len(set(tuned.binding.tolist())) <= 2
+
+
+def test_admission_controller_optimize_budget(tiny):
+    # population below the default elite count must clamp, not crash
+    ctl = AdmissionController(DYNAP_SE, optimize_budget=(2, 4))
+    ctl.register(tiny)
+    rep = ctl.admit(tiny.snn.name, n_tiles_request=2)
+    assert rep.throughput > 0
+    assert ctl.running() == {tiny.snn.name: sorted(set(rep.binding.tolist()))}
+
+
+def test_optimize_budget_validation(tiny):
+    with pytest.raises(ValueError, match="optimize budget"):
+        optimize_binding(tiny, DYNAP_SE, population=1, generations=2)
+    with pytest.raises(ValueError, match="optimize budget"):
+        optimize_binding(tiny, DYNAP_SE, population=8, generations=0)
+
+
+# ======================================================================
+# SpiNeMap balance-cap regression: cap accumulated load, not counts
+# ======================================================================
+def _skewed_clusters(n=16, n_tiles=4):
+    """4 heavy clusters (indices 0,4,8,12) with strong mutual traffic that
+    pulls them onto one tile; 12 light clusters with negligible load."""
+    heavy = np.array([0, 4, 8, 12])
+    out_spikes = np.full(n, 1.0)
+    out_spikes[heavy] = 1000.0
+    src, dst, rate = [], [], []
+    for i in heavy:
+        for j in heavy:
+            if i < j:
+                src.append(i)
+                dst.append(j)
+                rate.append(5000.0)
+    for i in range(n - 1):  # weak chain keeps the rest connected
+        src.append(i)
+        dst.append(i + 1)
+        rate.append(1.0)
+    order = np.lexsort((np.array(dst), np.array(src)))
+    return ClusteredSNN(
+        snn=None,
+        cluster_of=np.zeros(n, dtype=np.int32),
+        n_clusters=n,
+        channel_src=np.array(src, dtype=np.int64)[order],
+        channel_dst=np.array(dst, dtype=np.int64)[order],
+        channel_rate=np.array(rate)[order],
+        inputs_used=np.full(n, 10.0),
+        neurons_used=np.full(n, 10.0),
+        synapses_used=np.full(n, 50.0),
+        out_spikes=out_spikes,
+        in_spikes=out_spikes.copy(),
+    )
+
+
+def test_spinemap_caps_accumulated_load_not_counts():
+    cl = _skewed_clusters()
+    hw = DYNAP_SE  # 4 tiles
+    res = bind_spinemap(cl, hw)
+    loads = _cluster_loads(cl, LoadWeights(), hw)
+    tile_load = np.bincount(res.binding, weights=loads, minlength=hw.n_tiles)
+    cap = 1.5 * loads.sum() / hw.n_tiles
+    # the old count cap admitted all four heavy clusters onto one tile
+    # (4 < ceil(1.5 * 16/4) = 6) -> one tile carried ~all the load
+    assert tile_load.max() <= cap + 1e-9
+    # and the binder still pursues its own objective: the cut does not
+    # regress vs the contiguous seed it starts from
+    seed = (np.arange(cl.n_clusters) * hw.n_tiles // cl.n_clusters).astype(int)
+    assert cut_spikes(cl, res.binding) <= cut_spikes(cl, seed) + 1e-9
+
+
+def test_spinemap_load_cap_allows_normal_kl_moves(tiny):
+    """The cap must not freeze the optimizer on benign inputs: on a real
+    clustering, spinemap still reduces cut spikes vs the load balancer."""
+    spine = bind_spinemap(tiny, DYNAP_SE)
+    ours = bind_ours(tiny, DYNAP_SE)
+    assert cut_spikes(tiny, spine.binding) <= cut_spikes(tiny, ours.binding)
