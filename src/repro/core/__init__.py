@@ -11,9 +11,16 @@ Pipeline (paper Fig. 2):
 
 from .apps import APP_NAMES, APP_SPECS, all_apps, build_app, small_app
 from .engine import (
+    CompileCacheStats,
     EngineReport,
+    OrderBatch,
     batch_execute,
     batch_throughputs,
+    compile_cache_stats,
+    order_cycle_lower_bounds,
+    pad_stack_to_buckets,
+    project_order_batch,
+    reset_compile_cache_stats,
     stack_hardware_aware,
 )
 from .explore import (
@@ -64,7 +71,12 @@ from .optimize import (
     bind_optimized,
     optimize_binding,
 )
-from .partition import Cluster, ClusteredSNN, partition_greedy
+from .partition import (
+    Cluster,
+    ClusteredSNN,
+    partition_greedy,
+    partition_greedy_reference,
+)
 from .runtime import (
     AdmissionController,
     AdmissionError,
@@ -83,6 +95,7 @@ from .schedule import (
     SelfTimedExecutor,
     analyze_throughput,
     build_static_orders,
+    build_static_orders_batch,
     measured_throughput,
     random_orders,
 )

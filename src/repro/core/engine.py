@@ -18,16 +18,25 @@ and differ only in NoC delays and TDMA order edges:
     recursion through the Pallas ``maxplus_bmm``/``maxplus_bmv`` kernels
     (:func:`~.maxplus.maxplus_matrix_batch` / :func:`~.maxplus.evolve_batch`).
 
-The heapq :class:`~.schedule.SelfTimedExecutor` remains the FCFS
-static-order *constructor* (§4.4 step 2) and the operational
-cross-validation oracle — see ``tests/test_engine.py``.
+Static orders travel through this module array-natively as well: an
+:class:`OrderBatch` carries B candidates' TDMA order cycles as (B, n)
+edge arrays (built in one shot by :func:`project_order_batch` or
+:func:`~.schedule.build_static_orders_batch`), keeping stacked shapes
+candidate-count-invariant; :func:`batch_execute` additionally rounds the
+stacked (B, n, E) shape up to pow2-ish buckets on the traced ("dense")
+backend so repeated admissions and optimizer generations hit the XLA
+compile cache (:func:`compile_cache_stats` exposes the counters).
+
+The heapq :class:`~.schedule.SelfTimedExecutor` remains the operational
+cross-validation oracle — see ``tests/test_engine.py`` and
+``tests/test_frontend.py``.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Optional, Sequence
+from typing import Optional, Sequence, Union
 
 import numpy as np
 
@@ -35,6 +44,7 @@ from .hardware import HardwareConfig
 from .maxplus import (
     NEG_INF,
     EdgeStack,
+    _on_tpu as _engine_on_tpu,
     evolve_batch,
     maxplus_matrix_batch,
     mcr_batch,
@@ -51,6 +61,155 @@ def _as_binding_matrix(bindings, n_actors: int) -> np.ndarray:
         b = b[None, :]
     assert b.ndim == 2 and b.shape[1] == n_actors, b.shape
     return b
+
+
+# ======================================================================
+# array-native static orders: (B, n) TDMA order-edge batch
+# ======================================================================
+@dataclasses.dataclass(frozen=True)
+class OrderBatch:
+    """Batched §4.4 step-2 TDMA order cycles as (B, n_actors) edge arrays.
+
+    Row ``b`` holds candidate b's order edges: every actor appears exactly
+    once as a source (``src[b]`` is a permutation of the actors) and its
+    edge points to the next actor in its tile's firing cycle, with one
+    initial token on each cycle's wrap-around edge.  A single-actor tile
+    degenerates to a one-token self-edge, whose cycle ratio (``tau``) is
+    already implied by the actor's own self-edge — so the slot count is
+    exactly ``n_actors`` for EVERY candidate, making stacked shapes
+    invariant across bindings (the shape-bucket compile cache's best
+    case).  Replaces ``list[list[int]]`` orders on every batched hot path;
+    the list form remains supported for hand-built schedules.
+    """
+
+    src: np.ndarray        # (B, n_actors) int64; row = permutation of actors
+    dst: np.ndarray        # (B, n_actors) int64 successor on the tile cycle
+    tokens: np.ndarray     # (B, n_actors) int64; 1 on each wrap-around edge
+
+    @property
+    def n_graphs(self) -> int:
+        """Number of candidate rows B."""
+        return int(self.src.shape[0])
+
+    @property
+    def n_actors(self) -> int:
+        """Actor count n shared by all rows."""
+        return int(self.src.shape[1])
+
+    def row(
+        self, b: int, binding: np.ndarray, n_tiles: Optional[int] = None
+    ) -> list[list[int]]:
+        """Row ``b`` as per-tile order lists (compat with the list form).
+
+        ``binding`` is the row's (n_actors,) tile assignment; tiles are
+        returned in id order (``n_tiles`` of them — defaults to the highest
+        bound tile + 1) with their actors in firing order.
+        """
+        binding = np.asarray(binding)
+        if n_tiles is None:
+            n_tiles = int(binding.max(initial=0)) + 1
+        per_tile: list[list[int]] = [[] for _ in range(n_tiles)]
+        for a in self.src[b]:
+            per_tile[int(binding[a])].append(int(a))
+        return per_tile
+
+
+#: Orders accepted by the batched engine: per-candidate Python lists
+#: (entries may be None) or one array-native :class:`OrderBatch`.
+OrdersLike = Union[Sequence[Optional[Sequence[Sequence[int]]]], OrderBatch]
+
+
+def project_order_batch(single_order: Sequence[int], bindings) -> OrderBatch:
+    """Lemma-1 projection of ONE total order onto B bindings, batched.
+
+    ``single_order`` is the design-time single-tile actor order (a
+    permutation of ``range(n_actors)``; missing actors are appended in id
+    order, exactly like :func:`repro.core.runtime.project_order`);
+    ``bindings`` is (B, n_actors) int tile ids (a single (n,) binding is
+    promoted).  Returns the :class:`OrderBatch` whose row ``b`` chains each
+    tile's actors in ``single_order``'s relative order — the same per-tile
+    sequences ``project_order`` + ``order_edges`` produce, built with three
+    vectorized array ops instead of a per-candidate Python loop.
+    """
+    bindings = np.asarray(bindings, dtype=np.int64)
+    if bindings.ndim == 1:
+        bindings = bindings[None, :]
+    n_b, n = bindings.shape
+    order_arr = np.asarray(list(single_order), dtype=np.int64)
+    pos = np.full(n, -1, dtype=np.int64)
+    pos[order_arr] = np.arange(order_arr.size)
+    missing = np.flatnonzero(pos < 0)
+    pos[missing] = order_arr.size + np.arange(missing.size)
+
+    idx = np.arange(n)
+    key = bindings * n + pos[None, :]
+    sortidx = np.argsort(key, axis=1)                 # actors by (tile, rank)
+    sb = np.take_along_axis(bindings, sortidx, axis=1)
+    is_start = np.ones((n_b, n), dtype=bool)
+    is_start[:, 1:] = sb[:, 1:] != sb[:, :-1]
+    is_last = np.ones((n_b, n), dtype=bool)
+    is_last[:, :-1] = sb[:, 1:] != sb[:, :-1]
+    run_start = np.maximum.accumulate(
+        np.where(is_start, idx[None, :], 0), axis=1
+    )
+    nxt_pos = np.where(is_last, run_start, np.minimum(idx[None, :] + 1, n - 1))
+    dst = np.take_along_axis(sortidx, nxt_pos, axis=1)
+    return OrderBatch(
+        src=sortidx, dst=dst, tokens=is_last.astype(np.int64)
+    )
+
+
+def _order_shortcuts_batch(
+    ob: OrderBatch, tau: np.ndarray, bindings: np.ndarray
+) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """Batched max-plus path-doubling shortcuts over an :class:`OrderBatch`.
+
+    Same contract as :func:`_order_shortcuts`, vectorized across rows: for
+    span s = 2, 4, 8, … one composed edge per actor whose weight / tokens
+    are the sums along the underlying span-s path of its tile's order
+    cycle, so every cycle ratio — hence :func:`~.maxplus.mcr_batch` — is
+    exactly preserved while relaxation crosses a length-k cycle in O(log k)
+    rounds.  Returns ``(src, dst, tokens, weights)`` as (B, n * n_spans)
+    arrays (possibly zero-width).  NOT valid as Eq.-4 dependencies.
+    """
+    n_b, n = ob.src.shape
+    rows = np.arange(n_b)[:, None]
+    empty = np.zeros((n_b, 0), dtype=np.int64)
+    n_tiles = int(bindings.max(initial=0)) + 1
+    occ = np.bincount(
+        (rows * n_tiles + bindings).ravel(), minlength=n_b * n_tiles
+    )
+    max_len = int(occ.max(initial=0))
+    if n < 4 or max_len < 4:
+        return empty, empty, empty, np.zeros((n_b, 0))
+
+    nxt = np.empty((n_b, n), dtype=np.int64)
+    nxt[rows, ob.src] = ob.dst
+    m = np.zeros((n_b, n), dtype=np.int64)
+    m[rows, ob.src] = ob.tokens
+    w = np.take_along_axis(
+        np.broadcast_to(tau, (n_b, n)), nxt, axis=1
+    ).astype(np.float64)
+    base = np.broadcast_to(np.arange(n), (n_b, n))
+    srcs, dsts, toks, ws = [], [], [], []
+    span = 1
+    while 2 * span < max_len:
+        w = w + np.take_along_axis(w, nxt, axis=1)
+        m = m + np.take_along_axis(m, nxt, axis=1)
+        nxt = np.take_along_axis(nxt, nxt, axis=1)
+        span *= 2
+        srcs.append(base)
+        dsts.append(nxt.copy())
+        toks.append(m.copy())
+        ws.append(w.copy())
+    if not srcs:
+        return empty, empty, empty, np.zeros((n_b, 0))
+    return (
+        np.concatenate(srcs, axis=1),
+        np.concatenate(dsts, axis=1),
+        np.concatenate(toks, axis=1),
+        np.concatenate(ws, axis=1),
+    )
 
 
 def _order_shortcuts(
@@ -110,7 +269,7 @@ def _order_shortcuts(
 def order_cycle_lower_bounds(
     tau: np.ndarray,
     bindings: np.ndarray,
-    orders_list: Optional[Sequence[Optional[Sequence[Sequence[int]]]]],
+    orders_list: Optional[OrdersLike],
 ) -> Optional[np.ndarray]:
     """(B,) sound per-row lower bounds on the steady-state period.
 
@@ -122,9 +281,26 @@ def order_cycle_lower_bounds(
     :func:`~.maxplus.mcr_batch` (``lo0``) shrinks the bisection interval —
     in the paper's compute-bound regime (Table 2) it is usually within a
     few percent of the true period.  Returns None when no row has orders.
+    An :class:`OrderBatch` (every actor ordered on its tile) is scored with
+    two vectorized bincounts instead of the per-row Python walk.
     """
     if orders_list is None:
         return None
+    if isinstance(orders_list, OrderBatch):
+        n_b, n = bindings.shape
+        n_tiles = int(bindings.max(initial=0)) + 1
+        flat = (np.arange(n_b)[:, None] * n_tiles + bindings).ravel()
+        sums = np.bincount(
+            flat,
+            weights=np.broadcast_to(tau, (n_b, n)).ravel(),
+            minlength=n_b * n_tiles,
+        ).reshape(n_b, n_tiles)
+        counts = np.bincount(flat, minlength=n_b * n_tiles).reshape(
+            n_b, n_tiles
+        )
+        return np.where(counts >= 2, sums, -np.inf).max(
+            axis=1, initial=-np.inf
+        )
     n_b = bindings.shape[0]
     lo0 = np.full(n_b, -np.inf)
     any_orders = False
@@ -146,27 +322,32 @@ def stack_hardware_aware(
     app: SDFG,
     bindings,
     hw: HardwareConfig,
-    orders_list: Optional[Sequence[Optional[Sequence[Sequence[int]]]]] = None,
+    orders_list: Optional[OrdersLike] = None,
     *,
     relax_shortcuts: bool = False,
 ) -> EdgeStack:
     """Hardware-aware graphs of B candidate bindings as ONE EdgeStack.
 
     ``bindings`` is (B, n_actors) int (a single (n,) binding is promoted);
-    ``orders_list`` optionally gives per-candidate static orders (entries
-    may be None for order-free candidates).  Self-edges, flow edges and
+    ``orders_list`` optionally gives per-candidate static orders — either
+    per-candidate Python lists (entries may be None for order-free
+    candidates) or one array-native :class:`OrderBatch`, whose uniform
+    ``n_actors`` order-edge slots skip the per-row Python path entirely
+    AND keep the stacked shape invariant across candidate batches (the
+    shape-bucket compile cache's best case).  Self-edges, flow edges and
     buffer back-edges share src/dst/tokens across rows — only flow delays
     (NoC hops of each candidate's binding) and the order-edge slots differ.
     Order-edge slots are padded to the batch maximum with ``-inf`` weight,
     the (max,+) neutral element, so padding never joins a longest path.
 
     ``relax_shortcuts=True`` additionally emits path-doubling shortcut
-    edges along each row's order cycles (:func:`_order_shortcuts`): the
-    maximum cycle ratio — and therefore every period computed by
-    :func:`~.maxplus.mcr_batch` — is exactly preserved, while Bellman-Ford
-    relaxation converges in O(log cycle-length) instead of O(cycle-length)
-    rounds.  Stacks built this way are for cycle-ratio analysis ONLY; do
-    not pass them to :func:`~.maxplus.maxplus_matrix_batch`.
+    edges along each row's order cycles (:func:`_order_shortcuts` /
+    :func:`_order_shortcuts_batch`): the maximum cycle ratio — and
+    therefore every period computed by :func:`~.maxplus.mcr_batch` — is
+    exactly preserved, while Bellman-Ford relaxation converges in
+    O(log cycle-length) instead of O(cycle-length) rounds.  Stacks built
+    this way are for cycle-ratio analysis ONLY; do not pass them to
+    :func:`~.maxplus.maxplus_matrix_batch`.
 
     Returns an :class:`~.maxplus.EdgeStack` with (B, E) arrays; weights
     carry ``tau[dst] + delay`` in the time unit of ``app.exec_time``
@@ -177,7 +358,14 @@ def stack_hardware_aware(
     assert bindings.min(initial=0) >= 0 and bindings.max(initial=0) < hw.n_tiles, (
         f"binding tile ids must lie in [0, {hw.n_tiles})"
     )
-    if orders_list is not None:
+    order_batch: Optional[OrderBatch] = None
+    if isinstance(orders_list, OrderBatch):
+        order_batch = orders_list
+        assert order_batch.src.shape == (n_b, app.n_actors), (
+            order_batch.src.shape, (n_b, app.n_actors)
+        )
+        orders_list = None
+    elif orders_list is not None:
         assert len(orders_list) == n_b, (len(orders_list), n_b)
 
     keep_self, flow, back = hardware_static_parts(app, hw)
@@ -198,6 +386,45 @@ def stack_hardware_aware(
         [keep_self.delay, np.zeros(ef), back.delay]
     ))[None, :].repeat(n_b, axis=0)
     base_w[:, keep_self.src.size : keep_self.src.size + ef] += delays
+
+    if order_batch is not None:
+        # array-native order part: (B, n [+ shortcut spans]) — no per-row
+        # Python, and a candidate-count-invariant slot width.  Unlike the
+        # list path (order_edges filters each order by binding), the batch
+        # arrays are used as-is — so a stale OrderBatch reused after the
+        # bindings changed would chain actors across tiles; reject it.
+        rows_ix = np.arange(n_b)[:, None]
+        assert np.array_equal(
+            bindings[rows_ix, order_batch.src],
+            bindings[rows_ix, order_batch.dst],
+        ), "OrderBatch is inconsistent with bindings (edge crosses tiles); " \
+           "rebuild it with project_order_batch for these bindings"
+        o_src, o_dst = order_batch.src, order_batch.dst
+        o_tok = order_batch.tokens
+        o_w = tau[o_dst]
+        if relax_shortcuts:
+            s_src, s_dst, s_tok, s_w = _order_shortcuts_batch(
+                order_batch, tau, bindings
+            )
+            if s_src.shape[1]:
+                o_src = np.concatenate([o_src, s_src], axis=1)
+                o_dst = np.concatenate([o_dst, s_dst], axis=1)
+                o_tok = np.concatenate([o_tok, s_tok], axis=1)
+                o_w = np.concatenate([o_w, s_w], axis=1)
+        src = np.concatenate(
+            [np.broadcast_to(base_src, (n_b, e0)), o_src], axis=1
+        )
+        dst = np.concatenate(
+            [np.broadcast_to(base_dst, (n_b, e0)), o_dst], axis=1
+        )
+        tokens = np.concatenate(
+            [np.broadcast_to(base_tok, (n_b, e0)), o_tok], axis=1
+        )
+        weights = np.concatenate([base_w, o_w], axis=1)
+        return EdgeStack(
+            n_actors=app.n_actors, src=src, dst=dst, tokens=tokens,
+            weights=weights,
+        )
 
     # per-row order edges (+ optional shortcuts), padded to the batch max
     order_rows: list[Optional[tuple]] = []
@@ -245,6 +472,114 @@ def stack_hardware_aware(
 
 
 # ======================================================================
+# shape-bucket compile cache: stable stacked shapes across admissions
+# ======================================================================
+def _bucket_size(x: int) -> int:
+    """Round up to the next pow2-ish bucket (1, 2, 3, 4, 6, 8, 12, 16, …).
+
+    Half-steps between powers of two keep the bucket within 2x of the
+    request (< 50% padding waste, vs the plain next-power-of-two's ~100%)
+    while collapsing the long tail of one-off shapes onto a few buckets.
+    """
+    if x <= 1:
+        return 1
+    p = 1 << (x - 1).bit_length()          # next power of two >= x
+    if x <= (3 * p) // 4:
+        return (3 * p) // 4
+    return p
+
+
+@dataclasses.dataclass
+class CompileCacheStats:
+    """Shape-bucket reuse counters of the batched analysis layer.
+
+    Every :func:`batch_execute` call records its (backend, B, n_actors,
+    n_edges) stacked shape after bucket rounding; a shape seen before is a
+    ``hit`` (the XLA/toolchain compile cache can reuse the traced program),
+    a first sighting is a ``miss`` (a fresh trace/compile).  ``shapes``
+    maps each shape key to its occurrence count.
+    """
+
+    hits: int = 0
+    misses: int = 0
+    shapes: dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def hit_rate(self) -> float:
+        """hits / (hits + misses); 0.0 before any recorded call."""
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+    def record(self, key: tuple) -> None:
+        """Count one analysis call with stacked-shape signature ``key``."""
+        if key in self.shapes:
+            self.hits += 1
+            self.shapes[key] += 1
+        else:
+            self.misses += 1
+            self.shapes[key] = 1
+
+    def as_dict(self) -> dict:
+        """JSON-ready snapshot (consumed by ``benchmarks/compile_latency``)."""
+        return {
+            "hits": self.hits,
+            "misses": self.misses,
+            "hit_rate": self.hit_rate,
+            "n_distinct_shapes": len(self.shapes),
+        }
+
+
+_CACHE_STATS = CompileCacheStats()
+
+
+def compile_cache_stats() -> CompileCacheStats:
+    """The engine's live shape-bucket counters (see :class:`CompileCacheStats`)."""
+    return _CACHE_STATS
+
+
+def reset_compile_cache_stats() -> None:
+    """Zero the engine's shape-bucket counters (benchmark harness hook)."""
+    _CACHE_STATS.hits = 0
+    _CACHE_STATS.misses = 0
+    _CACHE_STATS.shapes.clear()
+
+
+def pad_stack_to_buckets(
+    stack: EdgeStack, lo0: Optional[np.ndarray] = None
+) -> tuple[EdgeStack, Optional[np.ndarray]]:
+    """Pad an EdgeStack's (B, E) arrays and actor count up to pow2-ish
+    bucket sizes (:func:`_bucket_size`).
+
+    Padded edge slots carry ``-inf`` weight (the (max,+) neutral element),
+    padded rows are entirely ``-inf`` (analyzed as acyclic and sliced off
+    by the caller), and padded actors are isolated — results over the
+    original rows/actors are bit-for-bit unchanged.  ``lo0`` (per-row
+    lower bounds) is padded with ``-inf`` rows alongside.  Bucketing the
+    shapes means repeated admissions and optimizer generations re-enter
+    the XLA compile cache instead of retracing ``maxplus_bmm`` /
+    ``mcr_batch`` for every one-off (B, n, E) combination.
+    """
+    b, e, n = stack.n_graphs, stack.n_edges, stack.n_actors
+    b2, e2, n2 = _bucket_size(b), _bucket_size(e), _bucket_size(n)
+    if (b2, e2, n2) == (b, e, n):
+        return stack, lo0
+    src = np.zeros((b2, e2), dtype=np.int64)
+    dst = np.zeros((b2, e2), dtype=np.int64)
+    tokens = np.ones((b2, e2), dtype=np.int64)
+    weights = np.full((b2, e2), NEG_INF)
+    src[:b, :e] = stack.src
+    dst[:b, :e] = stack.dst
+    tokens[:b, :e] = stack.tokens
+    weights[:b, :e] = stack.weights
+    padded = EdgeStack(
+        n_actors=n2, src=src, dst=dst, tokens=tokens, weights=weights
+    )
+    if lo0 is not None:
+        lo0 = np.concatenate([lo0, np.full(b2 - b, -np.inf)])
+    return padded, lo0
+
+
+# ======================================================================
 # batched execution: periods (+ optional steady-state start times)
 # ======================================================================
 @dataclasses.dataclass
@@ -285,12 +620,13 @@ def batch_execute(
     app: SDFG,
     bindings,
     hw: HardwareConfig,
-    orders_list: Optional[Sequence[Optional[Sequence[Sequence[int]]]]] = None,
+    orders_list: Optional[OrdersLike] = None,
     *,
     backend: str = "auto",
     rel_tol: float = 1e-8,
     with_starts: bool = False,
     power_iters: int = 64,
+    pad_shapes: Optional[bool] = None,
 ) -> EngineReport:
     """Self-timed steady state of every candidate, in one batched pass.
 
@@ -298,6 +634,8 @@ def batch_execute(
     promoted to B=1); the result's ``periods`` is (B,) in the time unit of
     ``app.exec_time`` (microseconds here) and ``starts`` — when requested —
     is (B, n_actors) steady-state start offsets in the same unit.
+    ``orders_list`` is per-candidate order lists or one
+    :class:`OrderBatch` (the array-native fast path).
 
     Replaces the per-candidate heapq simulation loop: periods come from the
     batched lambda-search over the stacked edge arrays (order-cycle
@@ -307,6 +645,14 @@ def batch_execute(
     x(k-1)`` through the batched semiring kernels.  ``rel_tol`` is the
     period's relative tolerance: 1e-8 for exact comparisons, looser (1e-4)
     when only ranking candidates matters.
+
+    ``pad_shapes`` rounds the stacked (B, n_actors, n_edges) shape up to
+    pow2-ish buckets (:func:`pad_stack_to_buckets`) so repeated calls hit
+    the XLA compile cache instead of retracing per shape; ``None`` (the
+    default) enables it exactly when the resolved backend is ``"dense"``
+    (the traced/compiled path — the float64 ``"edges"`` backend gains
+    nothing from padding and would only pay for the extra slots).  Every
+    call is recorded in :func:`compile_cache_stats` either way.
     """
     bindings = _as_binding_matrix(bindings, app.n_actors)
     t0 = time.perf_counter()
@@ -318,15 +664,26 @@ def batch_execute(
     t_build = time.perf_counter() - t0
 
     t1 = time.perf_counter()
+    if backend == "auto":
+        backend = "dense" if _engine_on_tpu() else "edges"
+    if pad_shapes is None:
+        pad_shapes = backend == "dense"
+    n_rows, n_act = stack.n_graphs, stack.n_actors
     lo0 = order_cycle_lower_bounds(app.exec_time, bindings, orders_list)
+    if pad_shapes:
+        stack, lo0 = pad_stack_to_buckets(stack, lo0)
+    _CACHE_STATS.record(
+        (backend, stack.n_graphs, stack.n_actors, stack.n_edges)
+    )
     periods = mcr_batch(stack, backend=backend, rel_tol=rel_tol, lo0=lo0)
+    periods = periods[:n_rows]
     starts = None
     if with_starts:
         t_mat = maxplus_matrix_batch(stack)
         x, _ = evolve_batch(t_mat, iters=power_iters)
         finite = np.isfinite(x)
         lo = np.where(finite, x, np.inf).min(axis=1, keepdims=True)
-        starts = np.where(finite, x - lo, np.inf)
+        starts = np.where(finite, x - lo, np.inf)[:n_rows, :n_act]
     return EngineReport(
         periods=periods,
         starts=starts,
@@ -339,7 +696,7 @@ def batch_throughputs(
     app: SDFG,
     bindings,
     hw: HardwareConfig,
-    orders_list=None,
+    orders_list: Optional[OrdersLike] = None,
     *,
     backend: str = "auto",
     rel_tol: float = 1e-8,

@@ -29,13 +29,13 @@ from typing import Callable, Optional, Sequence, Union
 import numpy as np
 
 from .binding import bind_ours, bind_pycarl, bind_spinemap, cut_spikes
-from .engine import batch_throughputs
+from .engine import batch_throughputs, project_order_batch
 from .hardware import DYNAP_SE, CrossbarConfig, HardwareConfig, TileConfig
 from .maxplus import mcr_batch, mcr_howard, stack_graphs, throughput_batch
 from .optimize import bind_optimized
 from .partition import ClusteredSNN, partition_greedy
 from .runtime import project_order
-from .schedule import build_static_orders
+from .schedule import build_static_orders, build_static_orders_batch
 from .sdfg import SDFG, hardware_aware_sdfg, sdfg_from_clusters
 from .snn import SNN
 
@@ -122,13 +122,20 @@ def build_candidates(
     hw_base: HardwareConfig = DYNAP_SE,
     with_orders: bool = True,
     sim_iterations: int = 12,
+    order_method: str = "batch",
 ) -> tuple[list[SweepPoint], list[SDFG], float]:
     """Construct every candidate's hardware-aware SDFG for a factorial sweep.
 
     ``apps`` mixes Table-1 app names and prebuilt :class:`SNN` objects.
-    Partitioning (Alg. 1) runs once per (app, crossbar); binding and static
-    orders per candidate.  Returns ``(points, graphs, build_time_s)`` with
-    throughputs still zero — analysis is a separate (batchable) step.
+    Partitioning (Alg. 1) runs once per (app, crossbar); binding per
+    candidate; static orders per (app, crossbar, tiles) GROUP — all
+    binders' bindings go through one
+    :func:`~repro.core.schedule.build_static_orders_batch` call
+    (``order_method="heapq"`` restores the per-candidate discrete-event
+    loop with ``sim_iterations`` FCFS iterations; ``sim_iterations`` is
+    IGNORED under the default ``"batch"`` constructor).  Returns
+    ``(points, graphs, build_time_s)`` with throughputs still zero —
+    analysis is a separate (batchable) step.
     """
     from .apps import build_app
 
@@ -144,28 +151,37 @@ def build_candidates(
         key = (snn.name, xb)
         if key not in clustered:
             clustered[key] = partition_greedy(snn, _hw_for(hw_base, xb, 1))
-    for snn, xb, n_tiles, binder in itertools.product(
-        snns, crossbar_sizes, tile_counts, binders
+    for snn, xb, n_tiles in itertools.product(
+        snns, crossbar_sizes, tile_counts
     ):
         cl = clustered[(snn.name, xb)]
         hw = _hw_for(hw_base, xb, n_tiles)
         app_g = sdfg_from_clusters(cl, hw=hw)
-        bres = BINDERS[binder](cl, hw)
-        orders = None
-        if with_orders:
-            orders, _ = build_static_orders(
-                app_g, bres.binding, hw, iterations=sim_iterations
+        bres_list = [BINDERS[binder](cl, hw) for binder in binders]
+        orders_group: Optional[list] = None
+        if with_orders and order_method == "batch":
+            orders_group = build_static_orders_batch(
+                app_g, np.stack([b.binding for b in bres_list]), hw
             )
-        graphs.append(hardware_aware_sdfg(app_g, bres.binding, hw, orders))
-        metas.append(SweepPoint(
-            app=snn.name,
-            crossbar=xb,
-            n_tiles=n_tiles,
-            binder=binder,
-            n_clusters=cl.n_clusters,
-            throughput=0.0,
-            cut_spikes=cut_spikes(cl, bres.binding),
-        ))
+        for k, (binder, bres) in enumerate(zip(binders, bres_list)):
+            orders = None
+            if with_orders:
+                if orders_group is not None:
+                    orders = orders_group[k]
+                else:
+                    orders, _ = build_static_orders(
+                        app_g, bres.binding, hw, iterations=sim_iterations
+                    )
+            graphs.append(hardware_aware_sdfg(app_g, bres.binding, hw, orders))
+            metas.append(SweepPoint(
+                app=snn.name,
+                crossbar=xb,
+                n_tiles=n_tiles,
+                binder=binder,
+                n_clusters=cl.n_clusters,
+                throughput=0.0,
+                cut_spikes=cut_spikes(cl, bres.binding),
+            ))
     return metas, graphs, time.perf_counter() - t_build0
 
 
@@ -205,6 +221,7 @@ def sweep(
     hw_base: HardwareConfig = DYNAP_SE,
     with_orders: bool = True,
     sim_iterations: int = 12,
+    order_method: str = "batch",
     method: str = "batched",
     backend: str = "auto",
     rel_tol: float = 1e-8,
@@ -222,6 +239,7 @@ def sweep(
         hw_base=hw_base,
         with_orders=with_orders,
         sim_iterations=sim_iterations,
+        order_method=order_method,
     )
     t_an0 = time.perf_counter()
     thrs = analyze_candidates(
@@ -317,19 +335,17 @@ def score_free_tile_subsets(
         bres = binder(clustered, sub_hw)
     virt_orders = project_order(list(single_order), bres.binding, k)
 
-    # one (B, n_clusters) binding matrix + per-candidate projected orders;
-    # the engine builds the candidate EdgeStack directly — no per-candidate
-    # SDFG objects, no per-candidate §4.4 transformation in Python
+    # one (B, n_clusters) binding matrix + ONE vectorized Lemma-1
+    # projection (OrderBatch): the engine builds the candidate EdgeStack
+    # directly — no per-candidate SDFG objects, no per-candidate order
+    # lists, no per-candidate §4.4 transformation in Python.  Projecting
+    # the single order under each candidate's physical binding yields
+    # exactly the virtual per-tile sequences relabeled onto the subset.
     app_g = sdfg_from_clusters(clustered, hw=hw)
     phys_bindings = np.asarray(subsets, dtype=np.int64)[:, bres.binding]
-    orders_list = []
-    for subset in subsets:
-        phys_orders: list[list[int]] = [[] for _ in range(hw.n_tiles)]
-        for virt, phys in enumerate(subset):
-            phys_orders[phys] = virt_orders[virt]
-        orders_list.append(phys_orders)
+    orders = project_order_batch(list(single_order), phys_bindings)
     thrs = batch_throughputs(
-        app_g, phys_bindings, hw, orders_list, backend=backend
+        app_g, phys_bindings, hw, orders, backend=backend
     )
     return SubsetScores(
         subsets=subsets,

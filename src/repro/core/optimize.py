@@ -13,9 +13,14 @@ population-based search over (B, n_clusters) binding matrices:
     per-candidate SDFG objects, exactly like
     :func:`~repro.core.explore.score_free_tile_subsets`),
   * proposals = the three §4.2/§6.3 heuristic binders as seeds, then
-    vectorized pairwise swaps, single-cluster moves and uniform crossover,
-  * schedules = the design-time single-tile order projected per candidate
-    (Lemma 1), so every scored configuration is deadlock-free,
+    vectorized pairwise swaps, single-cluster moves, uniform crossover,
+    and two guided mutation families — bottleneck-tile moves (serialized
+    compute) and comm-critical-path moves (co-locate the heaviest cut
+    channel's endpoints, the NoC-bound counterpart),
+  * schedules = ONE batched Lemma-1 projection of the design-time
+    single-tile order (:func:`~repro.core.engine.project_order_batch`),
+    so every scored configuration is deadlock-free and no per-candidate
+    Python runs between proposal and scoring,
   * the last build re-scores the elite archive TOGETHER WITH the heuristic
     seeds at exact tolerance and takes the argmin — the result is never
     worse than any seed *by construction*, not by luck.
@@ -41,10 +46,10 @@ from .binding import (
     bind_spinemap,
     lpt_assign,
 )
-from .engine import batch_execute
+from .engine import batch_execute, project_order_batch
 from .hardware import HardwareConfig
 from .partition import ClusteredSNN
-from .runtime import project_order, single_tile_order
+from .runtime import single_tile_order
 from .sdfg import sdfg_from_clusters
 
 _SEED_BINDERS = {
@@ -201,6 +206,40 @@ def _guided_mutate(
 
 
 
+def _comm_guided_mutate(
+    pop: np.ndarray,
+    ch_src: np.ndarray,
+    ch_dst: np.ndarray,
+    ch_rate: np.ndarray,
+    hw: HardwareConfig,
+    rng,
+) -> None:
+    """In-place comm-critical-path mutation of a (B, n) binding population.
+
+    Per row: find the heaviest *cut* channel — spike rate x current NoC hop
+    count, the dominant term of the Eq.-3 comm delay — and co-locate its
+    endpoints by moving one endpoint's cluster onto the other endpoint's
+    tile (direction chosen at random; the target tile already hosts a
+    cluster of the row, so allowed-tile subsets are preserved).  This is
+    the NoC-bound counterpart of :func:`_guided_mutate`: where that one
+    attacks the serialized-compute order cycle, this one attacks the
+    longest communication dependency.  Rows with every channel co-located
+    are left untouched.
+    """
+    if ch_src.size == 0:
+        return
+    b = pop.shape[0]
+    rows = np.arange(b)
+    hops = hw.hops_array(pop[:, ch_src], pop[:, ch_dst])
+    w = ch_rate[None, :] * hops
+    j = w.argmax(axis=1)
+    has = w[rows, j] > 0
+    to_src = rng.random(b) < 0.5
+    movers = np.where(to_src, ch_dst[j], ch_src[j])
+    targets = pop[rows, np.where(to_src, ch_src[j], ch_dst[j])]
+    pop[rows[has], movers[has]] = targets[has]
+
+
 def _dedup_rows(rows: np.ndarray) -> np.ndarray:
     """Unique rows of a (B, n) int matrix, first occurrence kept, in order."""
     seen: set[bytes] = set()
@@ -299,9 +338,14 @@ def optimize_binding(
     seed_mat = np.stack(list(seed_bindings.values()))
 
     def score(pop: np.ndarray, rel_tol: float) -> np.ndarray:
-        orders_list = [project_order(single_order, b, n_tiles) for b in pop]
+        # one vectorized Lemma-1 projection for the whole population: the
+        # engine consumes the OrderBatch directly, so no per-candidate
+        # Python runs between proposal and scoring (and the stacked shape
+        # is generation-invariant — every scoring call is a compile-cache
+        # hit after the first)
+        orders = project_order_batch(single_order, pop)
         rep = batch_execute(
-            app, pop, hw, orders_list, backend=backend, rel_tol=rel_tol
+            app, pop, hw, orders, backend=backend, rel_tol=rel_tol
         )
         # dead/acyclic rows (cannot happen for live apps, but stay safe)
         return np.where(
@@ -355,7 +399,7 @@ def optimize_binding(
 
         if gen == generations - 1:
             break
-        # -- next generation: elitism + crossover + guided/blind mutants
+        # -- next generation: elitism + crossover + guided/comm/blind
         nxt = np.empty_like(pop)
         nxt[:elite] = elites
         n_children = population - elite
@@ -363,14 +407,25 @@ def optimize_binding(
         pb = elites[rng.integers(0, elite, size=n_children)]
         cross = rng.random((n_children, n)) < 0.5
         children = np.where(cross, pa, pb)
-        # half the children climb the bottleneck tile (guided), the rest
-        # explore blindly; a heavy-mutation slice keeps diversity up
-        guided = rng.random(n_children) < 0.5
+        # children split three ways: climb the bottleneck tile (guided
+        # compute), co-locate the heaviest cut channel (guided comm — the
+        # NoC-bound operating points), or explore blindly; a
+        # heavy-mutation slice keeps diversity up
+        u = rng.random(n_children)
+        guided = u < 0.4
+        comm = (u >= 0.4) & (u < 0.6)
         if guided.any():
             block = children[guided]
             _guided_mutate(block, app.exec_time, n_tiles, tiles, rng)
             children[guided] = block
-        blind = ~guided
+        if comm.any():
+            block = children[comm]
+            _comm_guided_mutate(
+                block, clustered.channel_src, clustered.channel_dst,
+                clustered.channel_rate, hw, rng,
+            )
+            children[comm] = block
+        blind = u >= 0.6
         if blind.any():
             block = children[blind]
             _mutate(block, rng, tiles, swaps=1, moves=1)

@@ -36,6 +36,7 @@ from .schedule import (
     SelfTimedExecutor,
     analyze_throughput,
     build_static_orders,
+    build_static_orders_batch,
 )
 from .sdfg import SDFG, sdfg_from_clusters
 from .snn import SNN
@@ -74,24 +75,35 @@ def design_time_compile(
     binder=bind_ours,
     weights: LoadWeights = LoadWeights(),
     sim_iterations: int = 12,
+    order_method: str = "batch",
 ) -> CompileReport:
     """Full §4 design-time flow: bind, build per-tile static orders, and
     analyze throughput.
 
     ``binder`` is any :data:`~repro.core.explore.BINDERS`-style strategy
-    (``(clustered, hw, **kw) -> BindingResult``); ``sim_iterations`` is the
-    FCFS self-timed horizon used to record the static orders (§4.4 step 2).
-    Returns a :class:`CompileReport` (binding (n_clusters,), per-tile
-    orders, throughput in iterations per microsecond).
+    (``(clustered, hw, **kw) -> BindingResult``).  ``order_method``
+    selects the §4.4 step-2 constructor: ``"batch"`` (default, the dense
+    FCFS simulator :func:`~repro.core.schedule.build_static_orders_batch`)
+    or ``"heapq"`` (the discrete-event oracle; ``sim_iterations`` is its
+    FCFS self-timed horizon and is IGNORED under ``"batch"``).  Returns a
+    :class:`CompileReport` (binding (n_clusters,), per-tile orders,
+    throughput in iterations per microsecond).
     """
     app = sdfg_from_clusters(clustered, hw=hw)
     try:
         bres: BindingResult = binder(clustered, hw, weights=weights)
     except TypeError:  # binders with no `weights` kw (spinemap)
         bres = binder(clustered, hw)
-    orders, t_sched = build_static_orders(
-        app, bres.binding, hw, iterations=sim_iterations
-    )
+    if order_method == "batch":
+        t0 = time.perf_counter()
+        orders = build_static_orders_batch(app, bres.binding, hw)[0]
+        t_sched = time.perf_counter() - t0
+    elif order_method == "heapq":
+        orders, t_sched = build_static_orders(
+            app, bres.binding, hw, iterations=sim_iterations
+        )
+    else:
+        raise ValueError(f"unknown order_method {order_method!r}")
     thr = analyze_throughput(app, bres.binding, hw, orders)
     return CompileReport(
         app=clustered.snn.name,
@@ -107,15 +119,36 @@ def design_time_compile(
 # single-tile schedule (design time, once per application)
 # ======================================================================
 def single_tile_order(
-    clustered: ClusteredSNN, hw: HardwareConfig, *, sim_iterations: int = 8
+    clustered: ClusteredSNN,
+    hw: HardwareConfig,
+    *,
+    sim_iterations: int = 8,
+    method: str = "batch",
 ) -> tuple[list[int], float]:
-    """Total actor order from a 1-tile execution of the application."""
+    """Total actor order from a 1-tile execution of the application.
+
+    Returns ``(order, wall_s)``: the (n_clusters,) design-time firing
+    order and its construction wall-clock seconds.  ``method="batch"``
+    (default) uses the dense FCFS simulator
+    (:func:`~repro.core.schedule.build_static_orders_batch`, ~100x faster
+    on the large Table-1 apps); ``"heapq"`` replays the discrete-event
+    oracle with ``sim_iterations`` FCFS iterations.  ``sim_iterations``
+    applies to the heapq path only (the dense constructor simulates the
+    one firing per actor that defines the order); longer heapq horizons
+    can record a different — equally valid — schedule when repeat firings
+    contend for tiles.
+    """
     t0 = time.perf_counter()
     one_tile = dataclasses.replace(hw, n_tiles=1)
     app = sdfg_from_clusters(clustered, hw=one_tile)
     binding = np.zeros(clustered.n_clusters, dtype=np.int64)
-    orders, _ = build_static_orders(app, binding, one_tile,
-                                    iterations=sim_iterations)
+    if method == "batch":
+        orders = build_static_orders_batch(app, binding, one_tile)[0]
+    elif method == "heapq":
+        orders, _ = build_static_orders(app, binding, one_tile,
+                                        iterations=sim_iterations)
+    else:
+        raise ValueError(f"unknown single-tile order method {method!r}")
     return orders[0], time.perf_counter() - t0
 
 

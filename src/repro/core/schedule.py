@@ -17,9 +17,12 @@ equals the MCR — a property test asserts this.
 Batched evaluation of many candidate configurations does NOT loop this
 executor: once static orders exist, the order-augmented event graph fully
 determines self-timed execution, and :mod:`repro.core.engine` analyzes a
-whole candidate batch in one array pass (``x(k) = A (x) x(k-1)``).  The
-heapq executor remains the FCFS static-order *constructor* (§4.4 step 2)
-and the operational cross-validation oracle
+whole candidate batch in one array pass (``x(k) = A (x) x(k-1)``).
+Static-order *construction* is batched too:
+:func:`build_static_orders_batch` builds the FCFS orders of B candidate
+bindings in one dense tile-synchronous pass and matches the heapq
+executor's first-firing record exactly.  The heapq executor remains the
+§4.4 step-2 oracle and the operational cross-validation oracle
 (:meth:`ExecutionTrace.steady_period` matches the engine to ~1e-9).
 """
 
@@ -34,7 +37,7 @@ import numpy as np
 
 from .hardware import HardwareConfig
 from .maxplus import mcr_howard
-from .sdfg import SDFG, hardware_aware_sdfg
+from .sdfg import SDFG, flow_delays, hardware_aware_sdfg, hardware_static_parts
 
 
 # ======================================================================
@@ -86,13 +89,18 @@ class ExecutionTrace:
         if n_iters < 3:  # no two disjoint windows to compare
             return self.period
         scale = max(1.0, float(np.abs(f[-1]).max()))
-        for c in range(1, (n_iters - 1) // 2 + 1):
-            a = f[n_iters - 1] - f[n_iters - 1 - c]
-            b = f[n_iters - 1 - c] - f[n_iters - 1 - 2 * c]
-            if np.allclose(a, b, rtol=0.0, atol=atol * scale):
-                # per-actor rates agree across windows; the slowest actor's
-                # rate is the iteration period of the whole graph
-                return float(a.max() / c)
+        # all candidate cyclicities at once: window deltas a(c) and b(c) are
+        # (C, n_actors) slices of the recorded finish times; the smallest c
+        # whose two windows agree wins (one vectorized comparison, no
+        # per-cycle-length Python loop)
+        cs = np.arange(1, (n_iters - 1) // 2 + 1)
+        a = f[n_iters - 1][None, :] - f[n_iters - 1 - cs]
+        b = f[n_iters - 1 - cs] - f[n_iters - 1 - 2 * cs]
+        ok = np.flatnonzero(np.all(np.abs(a - b) <= atol * scale, axis=1))
+        if ok.size:
+            # per-actor rates agree across windows; the slowest actor's
+            # rate is the iteration period of the whole graph
+            return float(a[ok[0]].max() / cs[ok[0]])
         k0 = n_iters // 2
         return float((f[n_iters - 1] - f[k0]).max() / (n_iters - 1 - k0))
 
@@ -297,6 +305,164 @@ def build_static_orders(
     t0 = time.perf_counter()
     trace = SelfTimedExecutor(app, binding, hw).run(iterations=iterations)
     return trace.tile_orders, time.perf_counter() - t0
+
+
+def build_static_orders_batch(
+    app: SDFG,
+    bindings,
+    hw: HardwareConfig,
+) -> list[list[list[int]]]:
+    """FCFS static orders of B candidate bindings in ONE dense array pass.
+
+    ``bindings`` is (B, n_actors) int tile ids (a single (n,) binding is
+    promoted to B=1); returns ``orders[b][tile]`` = tile's firing order
+    (actor ids) for candidate ``b`` — the same §4.4 step-2 product as
+    :func:`build_static_orders`, constructed without a per-candidate Python
+    event loop.
+
+    The §4.4 step-2 schedule records each actor's FIRST firing, so the
+    construction simulates exactly one firing per actor.  In that regime an
+    actor, once ready, stays ready until it fires (every channel has a
+    single consumer), so each tile's FCFS order is its actors sorted by
+    first-ready time — and readiness is a pure array recursion over the
+    zero-token ("gating") edges: ``ready[a] = max over gating in-edges of
+    (finish[src] + delay)``.  The simulator advances all B candidates in
+    tile-synchronous rounds; a tile's FCFS head with ready time ``r`` is
+    committed in the current round only when ``r < s_min + min unfired
+    tau`` (``s_min`` = the row's earliest possible next firing), which
+    guarantees no later token arrival could produce an earlier-ready
+    competitor — the committed prefix always equals the discrete-event
+    order.  Matches ``SelfTimedExecutor.run(iterations=1).tile_orders``
+    exactly (cross-validated in ``tests/test_frontend.py``); times are in
+    the unit of ``app.exec_time`` (microseconds here).
+    """
+    bindings = np.asarray(bindings, dtype=np.int64)
+    if bindings.ndim == 1:
+        bindings = bindings[None, :]
+    n_b, n = bindings.shape
+    assert n == app.n_actors, (bindings.shape, app.n_actors)
+    n_tiles = hw.n_tiles
+    tau = app.exec_time
+    rows = np.arange(n_b)
+
+    # §4.4 edge set WITHOUT order edges (ordering is what we construct),
+    # with per-row NoC delays — the same graph the FCFS executor runs on.
+    keep_self, flow, back = hardware_static_parts(app, hw)
+    base_src = np.concatenate([keep_self.src, flow.src, back.src])
+    base_dst = np.concatenate([keep_self.dst, flow.dst, back.dst])
+    base_tok = np.concatenate([keep_self.tokens, flow.tokens, back.tokens])
+    gating = base_tok == 0          # only empty channels gate a first firing
+    g_src = base_src[gating]
+    g_dst = base_dst[gating]
+    n_gate = g_src.size
+    base_delay = np.concatenate([keep_self.delay, np.zeros(len(flow)), back.delay])
+    g_delay = np.broadcast_to(base_delay[gating], (n_b, n_gate)).copy()
+    if len(flow):
+        # flow edges keep NO app delay; gating flow columns get the per-row
+        # NoC delays (exactly as in hardware_aware_sdfg / the executor)
+        flow_lo = keep_self.src.size
+        is_flow_gate = np.zeros(base_src.size, dtype=bool)
+        is_flow_gate[flow_lo : flow_lo + len(flow)] = True
+        is_flow_gate &= gating
+        gate_pos = np.cumsum(gating) - 1          # column among gating edges
+        cols = gate_pos[is_flow_gate]
+        flow_sel = is_flow_gate[flow_lo : flow_lo + len(flow)]
+        g_delay[:, cols] = flow_delays(flow, bindings, hw)[:, flow_sel]
+
+    # gating out-edge CSR by src (token-arrival fan-out of one firing)
+    out_order = np.argsort(g_src, kind="stable")
+    src_sorted = g_src[out_order]
+    out_starts = np.searchsorted(src_sorted, np.arange(n), side="left")
+    out_counts = np.searchsorted(src_sorted, np.arange(n), side="right") - out_starts
+
+    # per-(row, tile) segments over actors sorted by (tile, actor id)
+    order2d = np.argsort(bindings, axis=1, kind="stable")
+    sorted_binding = np.take_along_axis(bindings, order2d, axis=1)
+    flat_group = (rows[:, None] * n_tiles + sorted_binding).ravel()
+    seg_keys, seg_pos = np.unique(flat_group, return_index=True)
+
+    gin = np.bincount(g_dst, minlength=n)
+    defc = np.broadcast_to(gin, (n_b, n)).copy().ravel()
+    rmax = np.zeros(n_b * n)
+    ready = np.where(defc == 0, 0.0, np.inf).reshape(n_b, n)
+    unfired = np.ones((n_b, n), dtype=bool)
+    tile_clock = np.zeros((n_b, n_tiles))
+    start = np.full((n_b, n), np.inf)
+    actor_ids = np.broadcast_to(np.arange(n), (n_b, n))
+
+    for _ in range(n + 1):
+        if not unfired.any():
+            break
+        eligible = unfired & np.isfinite(ready)
+        keyr = np.where(eligible, ready, np.inf)
+        vals = np.take_along_axis(keyr, order2d, axis=1).ravel()
+        m1 = np.full(n_b * n_tiles, np.inf)
+        m1[seg_keys] = np.minimum.reduceat(vals, seg_pos)
+        m1 = m1.reshape(n_b, n_tiles)
+        valid_t = np.isfinite(m1)
+        if not valid_t.any():
+            break  # deadlock (never for live graphs); report partial orders
+        # FCFS head per tile: the smallest actor id at the minimal ready time
+        head_ok = eligible & (ready == m1[rows[:, None], bindings])
+        cand_vals = np.where(
+            np.take_along_axis(head_ok, order2d, axis=1).ravel(),
+            np.take_along_axis(actor_ids, order2d, axis=1).ravel(),
+            n,
+        )
+        cand = np.full(n_b * n_tiles, n, dtype=np.int64)
+        cand[seg_keys] = np.minimum.reduceat(cand_vals, seg_pos)
+        cand = cand.reshape(n_b, n_tiles)
+
+        s = np.maximum(tile_clock, m1)
+        s_min = np.where(valid_t, s, np.inf).min(axis=1)
+        tau_min = np.where(unfired, tau[None, :], np.inf).min(axis=1)
+        commit = valid_t & (m1 < (s_min + tau_min)[:, None])
+        # progress guarantee (tau == 0 corner): always commit the row's
+        # globally-earliest firing, which is safe by the wavefront argument
+        t_star = np.where(valid_t, s, np.inf).argmin(axis=1)
+        any_valid = valid_t.any(axis=1)
+        commit[rows[any_valid], t_star[any_valid]] = True
+
+        bidx, tidx = np.nonzero(commit)
+        actors = cand[bidx, tidx]
+        s_c = s[bidx, tidx]
+        fin = s_c + tau[actors]
+        start[bidx, actors] = s_c
+        unfired[bidx, actors] = False
+        tile_clock[bidx, tidx] = fin
+
+        # token arrivals: one vectorized scatter over the commits' gating
+        # out-edges updates deficits and running ready maxima
+        lens = out_counts[actors]
+        tot = int(lens.sum())
+        if tot:
+            seg_off = np.concatenate([[0], np.cumsum(lens)[:-1]])
+            e_flat = (
+                np.repeat(out_starts[actors] - seg_off, lens) + np.arange(tot)
+            )
+            e_idx = out_order[e_flat]
+            rep_b = np.repeat(bidx, lens)
+            avail = np.repeat(fin, lens) + g_delay[rep_b, e_idx]
+            keys = rep_b * n + g_dst[e_idx]
+            np.maximum.at(rmax, keys, avail)
+            np.add.at(defc, keys, -1)
+            touched = np.unique(keys)
+            ready.ravel()[touched] = np.where(
+                defc[touched] == 0, rmax[touched], np.inf
+            )
+
+    # per-tile orders = actors sorted by start time (strictly increasing
+    # within a tile: each firing advances the tile clock by tau > 0)
+    orders: list[list[list[int]]] = []
+    for b in range(n_b):
+        fire_seq = np.argsort(start[b], kind="stable")
+        per_tile: list[list[int]] = [[] for _ in range(n_tiles)]
+        row_binding = bindings[b]
+        for a in fire_seq:
+            if np.isfinite(start[b, a]):
+                per_tile[row_binding[a]].append(int(a))
+        orders.append(per_tile)
+    return orders
 
 
 def random_orders(

@@ -77,49 +77,59 @@ class SNN:
         if heavy.size == 0:
             return self
 
-        pre = self.pre.copy()
-        post = self.post.copy()
-        weight = self.weight.copy()
-        new_pre: list[np.ndarray] = []
-        new_post: list[np.ndarray] = []
-        new_w: list[np.ndarray] = []
-        extra_spikes: list[float] = []
-        extra_layer: list[int] = []
+        post = self.post.astype(np.int64)
 
-        order = np.argsort(post, kind="stable")
+        # every heavy neuron's synapses, sorted by (post, pre, synapse id):
+        # slicing contiguous SOURCE ranges keeps each sub-neuron's receptive
+        # field compact (packs into shared crossbar rows)
+        key = post * np.int64(self.n_neurons) + self.pre
+        order = np.argsort(key, kind="stable")
         post_sorted = post[order]
         starts = np.searchsorted(post_sorted, heavy, side="left")
         ends = np.searchsorted(post_sorted, heavy, side="right")
+        counts = ends - starts                      # (H,) fan-in per heavy
+        # balanced parts: 133 -> 67+66, not 128+5 — a near-cap part would
+        # monopolize an entire crossbar's input rows by itself; the first
+        # (count % n_parts) parts carry one extra synapse (np.array_split)
+        n_parts = -(-counts // max_fanin)
+        base = counts // n_parts
+        rem = counts % n_parts
 
-        next_id = self.n_neurons
-        for n, s, e in zip(heavy, starts, ends):
-            syn_idx = order[s:e]
-            # slice contiguous SOURCE ranges so each sub-neuron keeps a
-            # compact receptive field (packs into shared crossbar rows)
-            syn_idx = syn_idx[np.argsort(pre[syn_idx], kind="stable")]
-            # balanced parts: 133 -> 67+66, not 128+5 — a near-cap part
-            # would monopolize an entire crossbar's input rows by itself
-            n_parts = int(np.ceil(syn_idx.size / max_fanin))
-            for part in np.array_split(syn_idx, n_parts):
-                post[part] = next_id  # re-target to sub-neuron
-                # sub-neuron -> aggregator synapse (weight 1: relay)
-                new_pre.append(np.array([next_id], dtype=np.int32))
-                new_post.append(np.array([n], dtype=np.int32))
-                new_w.append(np.array([1.0], dtype=np.float32))
-                # relay spikes: proportional share of the target's traffic
-                extra_spikes.append(float(self.spikes[n]))
-                extra_layer.append(int(self.layer_of[n]))
-                next_id += 1
+        total = int(counts.sum())
+        seg_off = np.concatenate([[0], np.cumsum(counts)[:-1]])
+        flat = np.repeat(starts - seg_off, counts) + np.arange(total)
+        syn_idx = order[flat]                       # heavy synapses, in order
+        pos = np.arange(total) - np.repeat(seg_off, counts)
+        base_r = np.repeat(base, counts)
+        big = np.repeat(rem, counts) * (base_r + 1)
+        part = np.where(
+            pos < big,
+            pos // (base_r + 1),
+            np.repeat(rem, counts) + (pos - big) // base_r,
+        )
+        part_off = np.concatenate([[0], np.cumsum(n_parts)[:-1]])
+        # re-target each heavy synapse to its sub-neuron (ids in
+        # (heavy neuron asc, part asc) order, appended after the originals)
+        post[syn_idx] = self.n_neurons + np.repeat(part_off, counts) + part
 
+        total_parts = int(n_parts.sum())
+        # sub-neuron -> aggregator synapses (weight 1: relay); relay spikes
+        # are a proportional share of the target's traffic
+        new_pre = self.n_neurons + np.arange(total_parts)
+        new_post = np.repeat(heavy, n_parts)
         out = SNN(
-            n_neurons=next_id,
-            pre=np.concatenate([pre] + new_pre).astype(np.int32),
-            post=np.concatenate([post] + new_post).astype(np.int32),
-            weight=np.concatenate([weight] + new_w).astype(np.float32),
-            spikes=np.concatenate([self.spikes, np.asarray(extra_spikes)]),
-            layer_of=np.concatenate(
-                [self.layer_of, np.asarray(extra_layer, dtype=np.int32)]
+            n_neurons=self.n_neurons + total_parts,
+            pre=np.concatenate([self.pre, new_pre]).astype(np.int32),
+            post=np.concatenate([post, new_post]).astype(np.int32),
+            weight=np.concatenate(
+                [self.weight, np.ones(total_parts, dtype=np.float32)]
+            ).astype(np.float32),
+            spikes=np.concatenate(
+                [self.spikes, np.repeat(self.spikes[heavy], n_parts)]
             ),
+            layer_of=np.concatenate(
+                [self.layer_of, np.repeat(self.layer_of[heavy], n_parts)]
+            ).astype(np.int32),
             name=self.name,
         )
         out.validate()
