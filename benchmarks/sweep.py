@@ -44,7 +44,7 @@ QUICK_APPS = ("ImgSmooth", "MLP-MNIST", "CNN-MNIST")
 # ======================================================================
 def fidelity_sweep(apps, tile_counts=(4, 9, 16), binders=("ours", "spinemap", "pycarl")):
     """Factorial sweep; batched analysis must match per-graph Howard."""
-    metas, graphs, t_build = build_candidates(
+    metas, graphs, t_build, _ = build_candidates(
         apps, tile_counts=tile_counts, binders=binders
     )
     t0 = time.perf_counter()

@@ -11,6 +11,7 @@ Pipeline (paper Fig. 2):
 
 from .apps import APP_NAMES, APP_SPECS, all_apps, build_app, small_app
 from .engine import (
+    ChipMetrics,
     CompileCacheStats,
     EngineReport,
     OrderBatch,
@@ -20,6 +21,7 @@ from .engine import (
     order_cycle_lower_bounds,
     pad_stack_to_buckets,
     project_order_batch,
+    record_cache_stats,
     reset_compile_cache_stats,
     stack_hardware_aware,
 )
@@ -41,6 +43,7 @@ from .binding import (
     bind_pycarl,
     bind_spinemap,
     cut_spikes,
+    cut_spikes_batch,
 )
 from .hardware import (
     DYNAP_SE,
@@ -68,8 +71,10 @@ from .maxplus import (
 from .optimize import (
     GenerationStat,
     OptimizeReport,
+    ParetoPoint,
     bind_optimized,
     optimize_binding,
+    optimize_binding_graph,
 )
 from .partition import (
     Cluster,
@@ -104,6 +109,7 @@ from .sdfg import (
     Channel,
     ChannelTable,
     as_channel_table,
+    disjoint_union,
     hardware_aware_sdfg,
     order_edges,
     sdfg_from_clusters,

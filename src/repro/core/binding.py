@@ -232,3 +232,19 @@ def cut_spikes(c: ClusteredSNN, binding: np.ndarray) -> float:
     binding = np.asarray(binding)
     cut = binding[c.channel_src] != binding[c.channel_dst]
     return float(c.channel_rate[cut].sum())
+
+
+def cut_spikes_batch(c: ClusteredSNN, bindings) -> np.ndarray:
+    """Inter-tile spike traffic of a whole (B, n_clusters) binding batch.
+
+    Vectorized :func:`cut_spikes`: one (B, n_channels) gather over the
+    clustered SNN's parallel channel arrays scores every row at once (a
+    single (n_clusters,) binding is promoted to B=1).  Returns (B,)
+    spikes crossing tile boundaries per application iteration — the
+    SpiNeMap objective and the AER-encode term of the chip energy model.
+    """
+    bindings = np.asarray(bindings, dtype=np.int64)
+    if bindings.ndim == 1:
+        bindings = bindings[None, :]
+    cut = bindings[:, c.channel_src] != bindings[:, c.channel_dst]
+    return cut.astype(np.float64) @ c.channel_rate

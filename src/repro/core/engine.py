@@ -34,6 +34,7 @@ cross-validation oracle — see ``tests/test_engine.py`` and
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import time
 from typing import Optional, Sequence, Union
@@ -49,7 +50,7 @@ from .maxplus import (
     maxplus_matrix_batch,
     mcr_batch,
 )
-from .sdfg import SDFG, flow_delays, hardware_static_parts, order_edges
+from .sdfg import SDFG, hardware_static_parts, order_edges
 
 
 # ======================================================================
@@ -318,6 +319,27 @@ def order_cycle_lower_bounds(
     return lo0 if any_orders else None
 
 
+@dataclasses.dataclass(frozen=True)
+class ChipMetrics:
+    """Per-candidate chip-objective accumulators of one EdgeStack build.
+
+    Computed from the SAME vectorized hop pass that produces the stack's
+    NoC delays (no second traversal of the flow edges, no per-candidate
+    Python): ``cut_traffic[b]`` is candidate b's inter-tile spikes per
+    iteration (SpiNeMap's objective), ``spike_hops[b]`` the rate-weighted
+    NoC hop count (the link-energy term), ``tiles_used[b]`` the number of
+    occupied tiles (the idle-leakage term), and ``total_spikes`` the
+    binding-independent spikes delivered per iteration (crossbar reads).
+    Feed into :meth:`~repro.core.hardware.HardwareConfig.chip_energy`
+    together with the periods to get (B,) chip energies.
+    """
+
+    cut_traffic: np.ndarray   # (B,) inter-tile spikes per iteration
+    spike_hops: np.ndarray    # (B,) rate-weighted NoC hops per iteration
+    tiles_used: np.ndarray    # (B,) occupied tiles per candidate
+    total_spikes: float       # spikes delivered per iteration (all rows)
+
+
 def stack_hardware_aware(
     app: SDFG,
     bindings,
@@ -325,7 +347,8 @@ def stack_hardware_aware(
     orders_list: Optional[OrdersLike] = None,
     *,
     relax_shortcuts: bool = False,
-) -> EdgeStack:
+    with_metrics: bool = False,
+) -> Union[EdgeStack, tuple[EdgeStack, ChipMetrics]]:
     """Hardware-aware graphs of B candidate bindings as ONE EdgeStack.
 
     ``bindings`` is (B, n_actors) int (a single (n,) binding is promoted);
@@ -351,7 +374,11 @@ def stack_hardware_aware(
 
     Returns an :class:`~.maxplus.EdgeStack` with (B, E) arrays; weights
     carry ``tau[dst] + delay`` in the time unit of ``app.exec_time``
-    (microseconds throughout this pipeline).
+    (microseconds throughout this pipeline).  ``with_metrics=True``
+    returns ``(stack, ChipMetrics)`` instead: the per-candidate chip
+    accumulators (cut traffic, spike-hops, occupied tiles) fall out of
+    the same vectorized hop pass that produced the NoC delays, so the
+    energy objective costs no extra traversal.
     """
     bindings = _as_binding_matrix(bindings, app.n_actors)
     n_b = bindings.shape[0]
@@ -380,8 +407,29 @@ def stack_hardware_aware(
     e0 = base_src.size
     ef = len(flow)
 
-    # per-row flow delays in one vectorized call: (B, Ef)
-    delays = flow_delays(flow, bindings, hw) if ef else np.zeros((n_b, 0))
+    # per-row NoC hops in one vectorized gather: delays — and, when asked,
+    # the chip-objective accumulators — derive from this single pass
+    if ef:
+        hops = hw.hops_array(
+            np.take(bindings, flow.src, axis=-1),
+            np.take(bindings, flow.dst, axis=-1),
+        )
+        delays = hw.comm_delay_from_hops(flow.rate, hops)
+    else:
+        hops = np.zeros((n_b, 0), dtype=np.int64)
+        delays = np.zeros((n_b, 0))
+    metrics: Optional[ChipMetrics] = None
+    if with_metrics:
+        occ = np.bincount(
+            (np.arange(n_b)[:, None] * hw.n_tiles + bindings).ravel(),
+            minlength=n_b * hw.n_tiles,
+        ).reshape(n_b, hw.n_tiles)
+        metrics = ChipMetrics(
+            cut_traffic=(flow.rate * (hops > 0)).sum(axis=1),
+            spike_hops=(flow.rate * hops).sum(axis=1),
+            tiles_used=(occ > 0).sum(axis=1),
+            total_spikes=float(flow.rate.sum()),
+        )
     base_w = (tau[base_dst] + np.concatenate(
         [keep_self.delay, np.zeros(ef), back.delay]
     ))[None, :].repeat(n_b, axis=0)
@@ -421,10 +469,11 @@ def stack_hardware_aware(
             [np.broadcast_to(base_tok, (n_b, e0)), o_tok], axis=1
         )
         weights = np.concatenate([base_w, o_w], axis=1)
-        return EdgeStack(
+        stack = EdgeStack(
             n_actors=app.n_actors, src=src, dst=dst, tokens=tokens,
             weights=weights,
         )
+        return (stack, metrics) if with_metrics else stack
 
     # per-row order edges (+ optional shortcuts), padded to the batch max
     order_rows: list[Optional[tuple]] = []
@@ -466,9 +515,10 @@ def stack_hardware_aware(
         dst[row, e0 : e0 + k] = o_dst
         tokens[row, e0 : e0 + k] = o_tok
         weights[row, e0 : e0 + k] = o_w
-    return EdgeStack(
+    stack = EdgeStack(
         n_actors=app.n_actors, src=src, dst=dst, tokens=tokens, weights=weights
     )
+    return (stack, metrics) if with_metrics else stack
 
 
 # ======================================================================
@@ -530,11 +580,37 @@ class CompileCacheStats:
 
 
 _CACHE_STATS = CompileCacheStats()
+_CACHE_SINKS: list[CompileCacheStats] = []
 
 
 def compile_cache_stats() -> CompileCacheStats:
     """The engine's live shape-bucket counters (see :class:`CompileCacheStats`)."""
     return _CACHE_STATS
+
+
+@contextlib.contextmanager
+def record_cache_stats(stats: CompileCacheStats):
+    """Additionally record every batched-analysis shape into ``stats``.
+
+    Context manager: while active, each :func:`batch_execute` call records
+    its bucketed shape key into ``stats`` AS WELL AS the module-global
+    counters — hit/miss is judged against ``stats``' own history, so the
+    caller gets counters scoped to its lifetime (the
+    :class:`~repro.core.runtime.AdmissionController` wraps every admission
+    in one of these, keeping per-controller counters from leaking into
+    each other).  Re-entrant; sinks nest.
+    """
+    _CACHE_SINKS.append(stats)
+    try:
+        yield stats
+    finally:
+        # remove by identity: CompileCacheStats is a value-equal dataclass,
+        # so list.remove() could unregister a DIFFERENT sink with equal
+        # counters (e.g. two fresh controllers nesting)
+        for i in range(len(_CACHE_SINKS) - 1, -1, -1):
+            if _CACHE_SINKS[i] is stats:
+                del _CACHE_SINKS[i]
+                break
 
 
 def reset_compile_cache_stats() -> None:
@@ -592,6 +668,10 @@ class EngineReport:
     requested, holds per-actor steady-state start-time offsets from the
     max-plus recursion (normalized so each row's earliest actor starts at
     0) — the static schedule the paper's Eq. 4 evolution converges to.
+    ``energies``/``metrics``, when requested (``with_energy=True``), hold
+    per-candidate chip energy (pJ per iteration,
+    :meth:`~repro.core.hardware.HardwareConfig.chip_energy`; ``inf`` for
+    dead rows) and the raw :class:`ChipMetrics` accumulators.
     ``build_time_s`` / ``analysis_time_s`` are wall-clock seconds of the
     EdgeStack build and the batched analysis.
     """
@@ -600,6 +680,8 @@ class EngineReport:
     starts: Optional[np.ndarray]        # (B, n_actors) microseconds, or None
     build_time_s: float
     analysis_time_s: float
+    energies: Optional[np.ndarray] = None   # (B,) pJ per iteration, or None
+    metrics: Optional[ChipMetrics] = None
 
     @property
     def throughputs(self) -> np.ndarray:
@@ -625,6 +707,7 @@ def batch_execute(
     backend: str = "auto",
     rel_tol: float = 1e-8,
     with_starts: bool = False,
+    with_energy: bool = False,
     power_iters: int = 64,
     pad_shapes: Optional[bool] = None,
 ) -> EngineReport:
@@ -653,14 +736,21 @@ def batch_execute(
     (the traced/compiled path — the float64 ``"edges"`` backend gains
     nothing from padding and would only pay for the extra slots).  Every
     call is recorded in :func:`compile_cache_stats` either way.
+
+    ``with_energy=True`` additionally returns per-candidate chip energy
+    (``energies``, pJ per iteration) and the raw :class:`ChipMetrics`:
+    the accumulators ride the stack build's own hop pass, so the energy
+    objective adds no second traversal and no per-candidate Python.
     """
     bindings = _as_binding_matrix(bindings, app.n_actors)
     t0 = time.perf_counter()
     # shortcut edges preserve every cycle ratio but are NOT Eq.-4
     # dependencies, so the starts path must build the plain stack
-    stack = stack_hardware_aware(
-        app, bindings, hw, orders_list, relax_shortcuts=not with_starts
+    built = stack_hardware_aware(
+        app, bindings, hw, orders_list, relax_shortcuts=not with_starts,
+        with_metrics=with_energy,
     )
+    stack, metrics = built if with_energy else (built, None)
     t_build = time.perf_counter() - t0
 
     t1 = time.perf_counter()
@@ -672,9 +762,10 @@ def batch_execute(
     lo0 = order_cycle_lower_bounds(app.exec_time, bindings, orders_list)
     if pad_shapes:
         stack, lo0 = pad_stack_to_buckets(stack, lo0)
-    _CACHE_STATS.record(
-        (backend, stack.n_graphs, stack.n_actors, stack.n_edges)
-    )
+    key = (backend, stack.n_graphs, stack.n_actors, stack.n_edges)
+    _CACHE_STATS.record(key)
+    for sink in _CACHE_SINKS:
+        sink.record(key)
     periods = mcr_batch(stack, backend=backend, rel_tol=rel_tol, lo0=lo0)
     periods = periods[:n_rows]
     starts = None
@@ -684,11 +775,22 @@ def batch_execute(
         finite = np.isfinite(x)
         lo = np.where(finite, x, np.inf).min(axis=1, keepdims=True)
         starts = np.where(finite, x - lo, np.inf)[:n_rows, :n_act]
+    energies = None
+    if with_energy:
+        energies = hw.chip_energy(
+            periods,
+            metrics.cut_traffic,
+            metrics.spike_hops,
+            metrics.tiles_used,
+            metrics.total_spikes,
+        )
     return EngineReport(
         periods=periods,
         starts=starts,
         build_time_s=t_build,
         analysis_time_s=time.perf_counter() - t1,
+        energies=energies,
+        metrics=metrics,
     )
 
 

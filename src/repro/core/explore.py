@@ -28,8 +28,8 @@ from typing import Callable, Optional, Sequence, Union
 
 import numpy as np
 
-from .binding import bind_ours, bind_pycarl, bind_spinemap, cut_spikes
-from .engine import batch_throughputs, project_order_batch
+from .binding import bind_ours, bind_pycarl, bind_spinemap, cut_spikes_batch
+from .engine import batch_execute, project_order_batch
 from .hardware import DYNAP_SE, CrossbarConfig, HardwareConfig, TileConfig
 from .maxplus import mcr_batch, mcr_howard, stack_graphs, throughput_batch
 from .optimize import bind_optimized
@@ -53,7 +53,17 @@ BINDERS: dict[str, Callable] = {
 
 @dataclasses.dataclass(frozen=True)
 class SweepPoint:
-    """One evaluated candidate configuration."""
+    """One evaluated candidate configuration.
+
+    ``throughput`` is iterations per microsecond (1/period);
+    ``cut_spikes`` the inter-tile spikes per iteration (SpiNeMap's
+    objective) and ``spike_hops`` the rate-weighted NoC hop count — both
+    from one batched :func:`~repro.core.binding.cut_spikes_batch`-style
+    pass per binder group.  ``energy`` is the chip energy (pJ per
+    iteration, :meth:`~repro.core.hardware.HardwareConfig.chip_energy`,
+    filled in after analysis — it needs the period for the idle term), so
+    (throughput, energy) Pareto fronts over a sweep come for free.
+    """
 
     app: str
     crossbar: int        # crossbar inputs (= outputs; crosspoints = n^2)
@@ -62,6 +72,8 @@ class SweepPoint:
     n_clusters: int
     throughput: float
     cut_spikes: float
+    spike_hops: float = 0.0     # rate-weighted NoC hops / iteration
+    energy: float = 0.0         # pJ / iteration (0.0 until analyzed)
 
 
 @dataclasses.dataclass
@@ -95,14 +107,36 @@ class SweepReport:
         """CSV-ready rows (header + one tuple per sweep point)."""
         out: list[tuple] = [
             ("app", "crossbar", "tiles", "binder", "clusters",
-             "throughput", "cut_spikes")
+             "throughput", "cut_spikes", "spike_hops", "energy_pj")
         ]
         for p in self.points:
             out.append((
                 p.app, p.crossbar, p.n_tiles, p.binder, p.n_clusters,
                 f"{p.throughput:.6e}", f"{p.cut_spikes:.1f}",
+                f"{p.spike_hops:.1f}", f"{p.energy:.1f}",
             ))
         return out
+
+    def pareto_front(self, app: str) -> list[SweepPoint]:
+        """Non-dominated (period, energy) sweep points of ``app``.
+
+        Points sorted by descending throughput; a point survives iff no
+        other point of the same app has both higher-or-equal throughput
+        and strictly lower energy (the ascending-energy tiebreak makes a
+        throughput tie keep only its cheapest point).  Dead points (zero
+        throughput) never qualify.
+        """
+        mine = sorted(
+            (p for p in self.points if p.app == app and p.throughput > 0),
+            key=lambda p: (-p.throughput, p.energy),
+        )
+        front: list[SweepPoint] = []
+        best_e = np.inf
+        for p in mine:
+            if p.energy < best_e:
+                front.append(p)
+                best_e = p.energy
+        return front
 
 
 def _hw_for(base: HardwareConfig, crossbar: int, n_tiles: int) -> HardwareConfig:
@@ -123,7 +157,7 @@ def build_candidates(
     with_orders: bool = True,
     sim_iterations: int = 12,
     order_method: str = "batch",
-) -> tuple[list[SweepPoint], list[SDFG], float]:
+) -> tuple[list[SweepPoint], list[SDFG], float, dict]:
     """Construct every candidate's hardware-aware SDFG for a factorial sweep.
 
     ``apps`` mixes Table-1 app names and prebuilt :class:`SNN` objects.
@@ -134,8 +168,13 @@ def build_candidates(
     (``order_method="heapq"`` restores the per-candidate discrete-event
     loop with ``sim_iterations`` FCFS iterations; ``sim_iterations`` is
     IGNORED under the default ``"batch"`` constructor).  Returns
-    ``(points, graphs, build_time_s)`` with throughputs still zero —
-    analysis is a separate (batchable) step.
+    ``(points, graphs, build_time_s, energy_aux)`` with throughputs still
+    zero — analysis is a separate (batchable) step.  Traffic metrics
+    (``cut_spikes``, ``spike_hops``) are scored per binder GROUP in one
+    :func:`~repro.core.binding.cut_spikes_batch`-style vectorized pass;
+    ``energy_aux`` carries the period-independent energy pieces
+    (``dyn_energy`` pJ and ``idle_per_us`` pJ/us arrays, one entry per
+    point) that :func:`sweep` combines with the analyzed periods.
     """
     from .apps import build_app
 
@@ -151,6 +190,8 @@ def build_candidates(
         key = (snn.name, xb)
         if key not in clustered:
             clustered[key] = partition_greedy(snn, _hw_for(hw_base, xb, 1))
+    dyn_energy: list[float] = []
+    idle_per_us: list[float] = []
     for snn, xb, n_tiles in itertools.product(
         snns, crossbar_sizes, tile_counts
     ):
@@ -158,11 +199,22 @@ def build_candidates(
         hw = _hw_for(hw_base, xb, n_tiles)
         app_g = sdfg_from_clusters(cl, hw=hw)
         bres_list = [BINDERS[binder](cl, hw) for binder in binders]
+        bind_mat = np.stack([b.binding for b in bres_list])
+        # one vectorized traffic/energy pass for the whole binder group
+        cuts = cut_spikes_batch(cl, bind_mat)
+        hops = hw.hops_array(
+            bind_mat[:, cl.channel_src], bind_mat[:, cl.channel_dst]
+        )
+        s_hops = (cl.channel_rate[None, :] * hops).sum(axis=1)
+        total_spikes = float(cl.channel_rate.sum())
+        dyn = (
+            hw.e_spike_read * total_spikes
+            + hw.e_packet_encode * cuts
+            + hw.e_link_hop * s_hops
+        )
         orders_group: Optional[list] = None
         if with_orders and order_method == "batch":
-            orders_group = build_static_orders_batch(
-                app_g, np.stack([b.binding for b in bres_list]), hw
-            )
+            orders_group = build_static_orders_batch(app_g, bind_mat, hw)
         for k, (binder, bres) in enumerate(zip(binders, bres_list)):
             orders = None
             if with_orders:
@@ -173,6 +225,10 @@ def build_candidates(
                         app_g, bres.binding, hw, iterations=sim_iterations
                     )
             graphs.append(hardware_aware_sdfg(app_g, bres.binding, hw, orders))
+            dyn_energy.append(float(dyn[k]))
+            idle_per_us.append(
+                hw.p_tile_idle * len(set(bres.binding.tolist()))
+            )
             metas.append(SweepPoint(
                 app=snn.name,
                 crossbar=xb,
@@ -180,9 +236,14 @@ def build_candidates(
                 binder=binder,
                 n_clusters=cl.n_clusters,
                 throughput=0.0,
-                cut_spikes=cut_spikes(cl, bres.binding),
+                cut_spikes=float(cuts[k]),
+                spike_hops=float(s_hops[k]),
             ))
-    return metas, graphs, time.perf_counter() - t_build0
+    aux = {
+        "dyn_energy": np.asarray(dyn_energy),
+        "idle_per_us": np.asarray(idle_per_us),
+    }
+    return metas, graphs, time.perf_counter() - t_build0, aux
 
 
 def analyze_candidates(
@@ -229,9 +290,13 @@ def sweep(
     """Factorial design-space sweep, analyzed in one batched Max-Plus call.
 
     Composition of :func:`build_candidates` and :func:`analyze_candidates`;
-    see those for the knobs.
+    see those for the knobs.  Every point reports the chip metrics —
+    throughput, cut spikes, spike-hops and total energy (pJ/iteration,
+    idle term from the analyzed period) — so
+    :meth:`SweepReport.pareto_front` yields DSE Pareto fronts without a
+    second pass.
     """
-    metas, graphs, build_time = build_candidates(
+    metas, graphs, build_time, aux = build_candidates(
         apps,
         crossbar_sizes=crossbar_sizes,
         tile_counts=tile_counts,
@@ -247,8 +312,17 @@ def sweep(
     )
     analysis_time = time.perf_counter() - t_an0
 
+    periods = np.where(
+        np.asarray(thrs) > 0, 1.0 / np.maximum(thrs, 1e-300), np.inf
+    )
+    energies = np.where(
+        np.isfinite(periods),
+        aux["dyn_energy"] + aux["idle_per_us"] * periods,
+        np.inf,
+    )
     points = [
-        dataclasses.replace(p, throughput=float(t)) for p, t in zip(metas, thrs)
+        dataclasses.replace(p, throughput=float(t), energy=float(e))
+        for p, t, e in zip(metas, thrs, energies)
     ]
     return SweepReport(
         points=points,
@@ -289,22 +363,30 @@ class SubsetScores:
     """Batched scoring of candidate tile subsets (admission helper).
 
     ``subsets[i]`` is a k-tuple of physical tile ids scored by
-    ``throughputs[i]`` (iterations per microsecond; shape (len(subsets),)).
-    ``binding``/``virt_orders`` are the *virtual* (k-tile) binding
-    ((n_clusters,) ids in [0, k)) and the Lemma-1 projected per-tile
-    orders — computed once, reusable by the caller so admission doesn't
-    bind or project twice.
+    ``throughputs[i]`` (iterations per microsecond; shape (len(subsets),))
+    and ``energies[i]`` (chip energy, pJ per iteration — same batched
+    engine call, ``inf`` for dead candidates).  ``binding``/
+    ``virt_orders`` are the *virtual* (k-tile) binding ((n_clusters,) ids
+    in [0, k)) and the Lemma-1 projected per-tile orders — computed once,
+    reusable by the caller so admission doesn't bind or project twice.
     """
 
     subsets: list[tuple[int, ...]]
     throughputs: np.ndarray
     binding: np.ndarray              # (n_clusters,) virtual tile ids in [0, k)
     virt_orders: list[list[int]]
+    energies: Optional[np.ndarray] = None   # (len(subsets),) pJ / iteration
 
     @property
     def best(self) -> tuple[int, ...]:
         """The physical tile ids of the highest-throughput subset."""
         return self.subsets[int(np.argmax(self.throughputs))]
+
+    @property
+    def best_energy(self) -> tuple[int, ...]:
+        """The physical tile ids of the lowest-chip-energy subset."""
+        assert self.energies is not None, "scored without energies"
+        return self.subsets[int(np.argmin(self.energies))]
 
 
 def score_free_tile_subsets(
@@ -344,12 +426,13 @@ def score_free_tile_subsets(
     app_g = sdfg_from_clusters(clustered, hw=hw)
     phys_bindings = np.asarray(subsets, dtype=np.int64)[:, bres.binding]
     orders = project_order_batch(list(single_order), phys_bindings)
-    thrs = batch_throughputs(
-        app_g, phys_bindings, hw, orders, backend=backend
+    rep = batch_execute(
+        app_g, phys_bindings, hw, orders, backend=backend, with_energy=True
     )
     return SubsetScores(
         subsets=subsets,
-        throughputs=thrs,
+        throughputs=rep.throughputs,
         binding=bres.binding,
         virt_orders=virt_orders,
+        energies=rep.energies,
     )

@@ -14,6 +14,14 @@ synapse array (Mallik et al. [49]; Garbin et al. [36] for HfO2 devices) and
 the AER link serializes one spike packet per ``t_spike_link`` on the mesh.
 Absolute scales are configurable; every benchmark reports *normalized*
 throughput exactly like the paper, which is invariant to the absolute unit.
+
+Energy constants follow the same sources plus the SpiNeMap energy argument
+(Balaji et al.): inter-tile AER events dominate chip dynamic energy, so the
+model charges a per-spike crossbar read (OxRAM read, [49]/[36]), a
+per-packet AER encode at the source NI, a per-packet-per-hop mesh link
+cost, and a per-tile idle/leakage power integrated over the iteration
+period.  Units are picojoules (pJ) and microwatts (pJ/us); as with timing,
+absolute scales are configurable and benchmarks compare *relative* energy.
 """
 
 from __future__ import annotations
@@ -70,15 +78,44 @@ class HardwareConfig:
     # Fixed per-message NoC latency (route setup), per channel per firing.
     t_route: float = 0.05
 
+    # --- energy model (picojoules; idle power in pJ/us = uW) -------------
+    # OxRAM crossbar read + integrate per delivered spike ([49], [36]).
+    e_spike_read: float = 2.0
+    # AER encode/serialize per inter-tile spike packet at the source NI.
+    e_packet_encode: float = 1.0
+    # Mesh link traversal per spike packet per hop (SpiNeMap's dominant
+    # term: inter-tile AER events on the interconnect).
+    e_link_hop: float = 0.5
+    # Idle/leakage power per occupied tile (pJ per microsecond of period).
+    p_tile_idle: float = 0.25
+
+    @property
+    def mesh_shape(self) -> tuple[int, int]:
+        """(n_cols, n_rows) of the 2D mesh NoC, ``n_cols * n_rows == n_tiles``.
+
+        The most-square exact factorization with ``n_cols <= n_rows``:
+        4 -> (2, 2), 8 -> (2, 4), 9 -> (3, 3), 12 -> (3, 4); a prime tile
+        count degenerates to a (1, n) chain.  Tile ``t`` sits at column
+        ``t % n_cols``, row ``t // n_cols`` — always inside the mesh, which
+        the old square-only ``isqrt`` dimension did not guarantee for
+        non-square ``n_tiles``.
+        """
+        n = self.n_tiles
+        c = max(1, math.isqrt(n))
+        while c > 1 and n % c:
+            c -= 1
+        return c, n // c
+
     @property
     def mesh_dim(self) -> int:
-        return max(1, math.isqrt(self.n_tiles))
+        """Mesh column count (compat alias; equals both dims on squares)."""
+        return self.mesh_shape[0]
 
     def hops(self, src_tile: int, dst_tile: int) -> int:
         """Manhattan hop count on the 2D mesh NoC."""
         if src_tile == dst_tile:
             return 0
-        d = self.mesh_dim
+        d, _ = self.mesh_shape
         sx, sy = src_tile % d, src_tile // d
         dx, dy = dst_tile % d, dst_tile // d
         return abs(sx - dx) + abs(sy - dy)
@@ -97,12 +134,29 @@ class HardwareConfig:
 
     def hops_array(self, src_tiles: np.ndarray, dst_tiles: np.ndarray) -> np.ndarray:
         """Vectorized Manhattan hop counts (same-tile pairs report 0)."""
-        d = self.mesh_dim
+        d, _ = self.mesh_shape
         src_tiles = np.asarray(src_tiles, dtype=np.int64)
         dst_tiles = np.asarray(dst_tiles, dtype=np.int64)
         return np.abs(src_tiles % d - dst_tiles % d) + np.abs(
             src_tiles // d - dst_tiles // d
         )
+
+    def comm_delay_from_hops(
+        self, n_spikes: np.ndarray, hops: np.ndarray
+    ) -> np.ndarray:
+        """Vectorized :meth:`comm_delay` from precomputed hop counts.
+
+        ``hops == 0`` marks a same-tile pair (distinct tiles are always
+        >= 1 hop apart on the mesh) and yields zero delay.  Shared by
+        :meth:`comm_delay_array` and the batched engine, which derives
+        delay AND energy from one hop computation.
+        """
+        delay = (
+            self.t_route
+            + np.asarray(n_spikes) * (self.t_spike_encode + self.t_spike_link)
+            + (hops - 1) * self.t_spike_link
+        )
+        return np.where(hops == 0, 0.0, delay)
 
     def comm_delay_array(
         self, n_spikes: np.ndarray, src_tiles: np.ndarray, dst_tiles: np.ndarray
@@ -110,13 +164,75 @@ class HardwareConfig:
         """Vectorized :meth:`comm_delay` over parallel channel arrays."""
         src_tiles = np.asarray(src_tiles, dtype=np.int64)
         dst_tiles = np.asarray(dst_tiles, dtype=np.int64)
-        hops = self.hops_array(src_tiles, dst_tiles)
-        delay = (
-            self.t_route
-            + np.asarray(n_spikes) * (self.t_spike_encode + self.t_spike_link)
-            + (hops - 1) * self.t_spike_link
+        return self.comm_delay_from_hops(
+            n_spikes, self.hops_array(src_tiles, dst_tiles)
         )
-        return np.where(src_tiles == dst_tiles, 0.0, delay)
+
+    def energy_from_hops(
+        self, n_spikes: np.ndarray, hops: np.ndarray
+    ) -> np.ndarray:
+        """Dynamic NoC energy (pJ) per channel per iteration from hop counts.
+
+        ``n_spikes`` AER packets each pay one encode at the source NI plus
+        one link traversal per hop; same-tile channels (``hops == 0``) are
+        free — their spikes never leave the crossbar.  Mirrors
+        :meth:`comm_delay_from_hops` and broadcasts identically, so a
+        (B, E) hop matrix yields (B, E) energies in one call.
+        """
+        n_spikes = np.asarray(n_spikes)
+        return np.where(
+            hops == 0,
+            0.0,
+            n_spikes * (self.e_packet_encode + self.e_link_hop * hops),
+        )
+
+    def energy_array(
+        self, n_spikes: np.ndarray, src_tiles: np.ndarray, dst_tiles: np.ndarray
+    ) -> np.ndarray:
+        """Vectorized per-channel dynamic NoC energy (pJ per iteration).
+
+        Mirrors :meth:`comm_delay_array`: parallel channel arrays of spike
+        rates and endpoint tiles (leading batch dims broadcast) yield the
+        AER encode + link energy of moving each channel's spikes, zero for
+        co-located endpoints.
+        """
+        src_tiles = np.asarray(src_tiles, dtype=np.int64)
+        dst_tiles = np.asarray(dst_tiles, dtype=np.int64)
+        return self.energy_from_hops(
+            n_spikes, self.hops_array(src_tiles, dst_tiles)
+        )
+
+    def chip_energy(
+        self,
+        periods: np.ndarray,
+        cut_traffic: np.ndarray,
+        spike_hops: np.ndarray,
+        tiles_used: np.ndarray,
+        total_spikes: float,
+    ) -> np.ndarray:
+        """Total chip energy (pJ) per iteration for a batch of candidates.
+
+        ``periods`` is (B,) steady-state iteration periods (us);
+        ``cut_traffic`` is (B,) inter-tile spikes per iteration,
+        ``spike_hops`` (B,) rate-weighted hop counts, ``tiles_used`` (B,)
+        occupied-tile counts, and ``total_spikes`` the binding-independent
+        spikes delivered per iteration (crossbar reads).  Energy =
+        crossbar reads + AER encode of the cut + link hops + idle leakage
+        of the occupied tiles over one period; rows with a dead/acyclic
+        period (non-finite or <= 0) report ``inf``.
+        """
+        periods = np.asarray(periods, dtype=np.float64)
+        dyn = (
+            self.e_spike_read * total_spikes
+            + self.e_packet_encode * np.asarray(cut_traffic)
+            + self.e_link_hop * np.asarray(spike_hops)
+        )
+        ok = np.isfinite(periods) & (periods > 0)
+        return np.where(
+            ok,
+            dyn + self.p_tile_idle * np.asarray(tiles_used) * np.where(ok, periods, 0.0),
+            np.inf,
+        )
 
 
 # The three hardware models evaluated in the paper (§6.1, Fig. 16).

@@ -19,6 +19,18 @@ construction entirely, and batched scoring of candidate free-tile bindings
 through the array-native engine (:mod:`repro.core.engine`).  The
 module-level :func:`runtime_admit` remains the single-admission primitive
 the controller drives.
+
+With ``placement="joint"`` the controller goes beyond per-admission
+isolation: every admit/evict re-optimizes the bindings of ALL resident
+applications together, as one disjoint-union graph
+(:func:`~repro.core.sdfg.disjoint_union`) whose per-app order cycles come
+from the Lemma-1 projection of the concatenated single-tile orders — one
+union EdgeStack per optimizer generation, scored on the chip-level
+objective (period, chip energy, or their Pareto front) by
+:func:`~repro.core.optimize.optimize_binding_graph`.  The current
+(isolated) placement is always a seed of that search, so joint placement
+is never worse on the scored objective by construction; the trajectory
+records chip throughput and chip energy alongside every event.
 """
 
 from __future__ import annotations
@@ -30,6 +42,12 @@ from typing import Optional, Union
 import numpy as np
 
 from .binding import BindingResult, LoadWeights, bind_ours
+from .engine import (
+    CompileCacheStats,
+    batch_execute,
+    project_order_batch,
+    record_cache_stats,
+)
 from .hardware import HardwareConfig
 from .partition import ClusteredSNN, partition_greedy
 from .schedule import (
@@ -38,7 +56,7 @@ from .schedule import (
     build_static_orders,
     build_static_orders_batch,
 )
-from .sdfg import SDFG, sdfg_from_clusters
+from .sdfg import SDFG, disjoint_union, sdfg_from_clusters
 from .snn import SNN
 
 
@@ -326,9 +344,11 @@ class DesignArtifact:
     """Cached design-time products of one (application, hardware) pair.
 
     Everything admission needs that does NOT depend on which tiles happen
-    to be free: the clustering (Alg. 1) and the single-tile static order
-    (§5).  ``hits`` counts cache reuses — a re-admitted app pays neither
-    clustering nor order construction again.
+    to be free: the clustering (Alg. 1), the single-tile static order
+    (§5), and the application SDFG (``graph`` — reused by the chip-metric
+    and joint-placement union builds, so per-event tracking never
+    re-derives it from the clusters).  ``hits`` counts cache reuses — a
+    re-admitted app pays neither clustering nor order construction again.
     """
 
     app: str
@@ -336,18 +356,29 @@ class DesignArtifact:
     single_order: list[int]
     design_time_s: float
     hits: int = 0
+    graph: Optional[SDFG] = None
 
 
 @dataclasses.dataclass
 class AdmissionEvent:
-    """One step of the controller's lifecycle trajectory."""
+    """One step of the controller's lifecycle trajectory.
 
-    kind: str                 # admit | reject | finish | evict
+    ``chip_throughput``/``chip_energy`` record the chip-level state after
+    the event — 1/period of the union graph of all resident apps
+    (iterations per microsecond; every resident app sustains at least this
+    rate) and its energy per iteration (pJ) — when the controller tracks
+    chip metrics (always under ``placement="joint"``); 0.0 otherwise or
+    when the chip is empty.
+    """
+
+    kind: str                 # admit | reject | finish | evict | rebalance
     app: str
     tiles: list[int]
     wall_s: float             # wall-clock cost of the operation
     throughput: float = 0.0
     cache_hit: bool = False
+    chip_throughput: float = 0.0   # iterations / us of the union graph
+    chip_energy: float = 0.0       # pJ / iteration of the union graph
 
 
 def _same_application(app: Union[SNN, ClusteredSNN], art: DesignArtifact) -> bool:
@@ -383,6 +414,17 @@ class AdmissionController:
     "batched"``); ``evict`` is the preemption variant of ``finish`` —
     same release mechanics, distinct trajectory event, returns the freed
     tiles so a caller can re-admit a displaced app.
+
+    ``placement="joint"`` re-optimizes the bindings of ALL resident apps
+    after every admit and evict (see :meth:`chip_metrics` and the module
+    docstring): one union EdgeStack per optimizer generation over the
+    apps' combined tile footprint, with the isolated placement as a seed
+    — never worse on the chip ``objective`` (``"period"``/``"energy"``/
+    ``"pareto"``) by construction.  ``joint_budget`` is its
+    (generations, population) search budget.  ``cache_stats`` holds
+    shape-bucket compile-cache counters scoped to THIS controller
+    (recorded via :func:`~repro.core.engine.record_cache_stats`, so two
+    controllers never leak counters into each other).
     """
 
     def __init__(
@@ -393,7 +435,20 @@ class AdmissionController:
         tile_selection: str = "batched",
         sim_iterations: int = 8,
         optimize_budget: Optional[tuple[int, int]] = None,
+        placement: str = "isolated",
+        joint_budget: tuple[int, int] = (2, 16),
+        objective: str = "period",
+        track_chip_metrics: Optional[bool] = None,
     ):
+        if placement not in ("isolated", "joint"):
+            raise ValueError(
+                f"unknown placement {placement!r}; have ('isolated', 'joint')"
+            )
+        if objective not in ("period", "energy", "pareto"):
+            raise ValueError(
+                f"unknown objective {objective!r}; "
+                f"have ('period', 'energy', 'pareto')"
+            )
         self.hw = hw
         self.state = HardwareState(hw)
         self.weights = weights
@@ -402,6 +457,19 @@ class AdmissionController:
         # (generations, population) for throughput-in-the-loop refinement
         # of every admission's binding; None = heuristic-only (fastest)
         self.optimize_budget = optimize_budget
+        # chip-level placement policy: "isolated" admits each app on its
+        # own and never revisits it; "joint" re-optimizes all resident
+        # bindings together on every admit/evict (union EdgeStack)
+        self.placement = placement
+        self.joint_budget = joint_budget
+        self.objective = objective
+        # chip-metric tracking costs one B=1 union analysis per event;
+        # default on exactly when joint placement needs the numbers anyway
+        self.track_chip_metrics = (
+            placement == "joint" if track_chip_metrics is None
+            else track_chip_metrics
+        )
+        self.cache_stats = CompileCacheStats()
         self.artifacts: dict[tuple[str, HardwareConfig], DesignArtifact] = {}
         self.reports: dict[str, CompileReport] = {}
         self.events: list[AdmissionEvent] = []
@@ -438,6 +506,7 @@ class AdmissionController:
             clustered=clustered,
             single_order=order,
             design_time_s=time.perf_counter() - t0,
+            graph=sdfg_from_clusters(clustered, hw=self.hw),
         )
         self.artifacts[key] = art
         return art
@@ -482,15 +551,16 @@ class AdmissionController:
             )
         t0 = time.perf_counter()
         try:
-            report = runtime_admit(
-                art.clustered,
-                self.state,
-                art.single_order,
-                n_tiles_request=n_tiles_request,
-                weights=self.weights,
-                tile_selection=self.tile_selection,
-                optimize_budget=self.optimize_budget,
-            )
+            with record_cache_stats(self.cache_stats):
+                report = runtime_admit(
+                    art.clustered,
+                    self.state,
+                    art.single_order,
+                    n_tiles_request=n_tiles_request,
+                    weights=self.weights,
+                    tile_selection=self.tile_selection,
+                    optimize_budget=self.optimize_budget,
+                )
         except AdmissionError:
             self.events.append(AdmissionEvent(
                 kind="reject", app=art.app, tiles=[],
@@ -498,14 +568,18 @@ class AdmissionController:
             ))
             raise
         self.reports[art.app] = report
-        self.events.append(AdmissionEvent(
+        event = AdmissionEvent(
             kind="admit",
             app=art.app,
             tiles=sorted(self.state.allocated[art.app]),
             wall_s=time.perf_counter() - t0,
             throughput=report.throughput,
             cache_hit=cache_hit,
-        ))
+        )
+        self.events.append(event)
+        self._stamp_chip_metrics(event)
+        if self.placement == "joint":
+            self._rebalance()
         return report
 
     def _release(self, app: str, kind: str) -> list[int]:
@@ -516,9 +590,9 @@ class AdmissionController:
         tiles = sorted(self.state.allocated[app])
         self.state.release(app)
         self.reports.pop(app, None)
-        self.events.append(
-            AdmissionEvent(kind=kind, app=app, tiles=tiles, wall_s=0.0)
-        )
+        event = AdmissionEvent(kind=kind, app=app, tiles=tiles, wall_s=0.0)
+        self.events.append(event)
+        self._stamp_chip_metrics(event)
         return tiles
 
     def finish(self, app: str) -> list[int]:
@@ -526,8 +600,157 @@ class AdmissionController:
         return self._release(app, "finish")
 
     def evict(self, app: str) -> list[int]:
-        """Forcibly preempt a running app (the Fig.-11 displacement case)."""
-        return self._release(app, "evict")
+        """Forcibly preempt a running app (the Fig.-11 displacement case).
+
+        Under ``placement="joint"`` the remaining residents are re-placed
+        jointly right after the release (the freed tiles may be reclaimed
+        by the survivors); ``finish`` deliberately does not re-place.
+        """
+        tiles = self._release(app, "evict")
+        if self.placement == "joint":
+            self._rebalance()
+        return tiles
+
+    # -- chip-level placement (the union-graph objective layer) ---------
+    def _resident_union(self):
+        """Union view of all resident apps: graph, order, binding, offsets.
+
+        Returns ``(names, arts, union, union_order, union_binding,
+        offsets)`` — the disjoint-union SDFG of the resident apps (actors
+        offset per app, ``offsets[k]`` is app k's first actor), the
+        concatenated single-tile orders (a valid total order of the union:
+        no cross-app edges exist) and the concatenated current physical
+        bindings.
+        """
+        names = sorted(self.state.allocated)
+        arts = [self.artifacts[(n, self.hw)] for n in names]
+        graphs = [
+            a.graph if a.graph is not None
+            else sdfg_from_clusters(a.clustered, hw=self.hw)
+            for a in arts
+        ]
+        offsets = np.cumsum([0] + [g.n_actors for g in graphs])
+        union = disjoint_union(graphs, name="chip-union")
+        union_order: list[int] = []
+        for art, off in zip(arts, offsets[:-1]):
+            union_order.extend(int(a) + int(off) for a in art.single_order)
+        union_binding = np.concatenate(
+            [self.reports[n].binding for n in names]
+        )
+        return names, arts, union, union_order, union_binding, offsets
+
+    def chip_metrics(self) -> Optional[dict]:
+        """Chip-level steady state of the current placement, or None.
+
+        One B=1 engine call on the union graph of all resident apps under
+        their current bindings and Lemma-1 projected orders.  Returns
+        ``{"chip_period", "chip_throughput", "chip_energy",
+        "chip_noc_traffic", "n_resident"}`` — period in microseconds
+        (every resident app sustains at least 1/period iterations per
+        microsecond), energy in pJ per iteration, traffic in inter-tile
+        spikes per iteration — or None when no app is resident.
+        """
+        if not self.state.allocated:
+            return None
+        _, _, union, order, binding, _ = self._resident_union()
+        with record_cache_stats(self.cache_stats):
+            rep = batch_execute(
+                union, binding, self.hw,
+                project_order_batch(order, binding[None, :]),
+                with_energy=True,
+            )
+        period = float(rep.periods[0])
+        alive = np.isfinite(period) and period > 0
+        return {
+            "chip_period": period,
+            "chip_throughput": 1.0 / period if alive else 0.0,
+            "chip_energy": float(rep.energies[0]),
+            "chip_noc_traffic": float(rep.metrics.cut_traffic[0]),
+            "n_resident": len(self.state.allocated),
+        }
+
+    def _stamp_chip_metrics(self, event: AdmissionEvent) -> None:
+        """Record the post-event chip state onto ``event`` (when tracking)."""
+        if not self.track_chip_metrics:
+            return
+        m = self.chip_metrics()
+        if m is not None:
+            event.chip_throughput = m["chip_throughput"]
+            event.chip_energy = m["chip_energy"]
+
+    def _rebalance(self) -> None:
+        """Jointly re-place all resident apps (``placement="joint"``).
+
+        Runs :func:`~repro.core.optimize.optimize_binding_graph` on the
+        disjoint-union graph over the residents' combined tile footprint
+        (free tiles are NOT consumed — joint placement redistributes, and
+        may even shrink, the existing allocation).  The current isolated
+        placement seeds the search, so the chip objective never regresses;
+        shared-tile serialization is modeled exactly by the union order
+        cycles the projection produces.  Per-app reports are updated with
+        the (conservative) union throughput and each app's slice of the
+        union schedule; the trajectory records a ``"rebalance"`` event
+        with the new chip throughput and energy.
+        """
+        if len(self.state.allocated) < 2:
+            return
+        from .optimize import optimize_binding_graph
+
+        t0 = time.perf_counter()
+        names, arts, union, order, binding, offsets = self._resident_union()
+        footprint = sorted(
+            {t for ts in self.state.allocated.values() for t in ts}
+        )
+        gens, pop = self.joint_budget
+        ch_src = np.concatenate([
+            a.clustered.channel_src + off
+            for a, off in zip(arts, offsets[:-1])
+        ])
+        ch_dst = np.concatenate([
+            a.clustered.channel_dst + off
+            for a, off in zip(arts, offsets[:-1])
+        ])
+        ch_rate = np.concatenate(
+            [a.clustered.channel_rate for a in arts]
+        )
+        with record_cache_stats(self.cache_stats):
+            rep = optimize_binding_graph(
+                union, self.hw, order,
+                seed_bindings={"isolated": binding},
+                channel_src=ch_src, channel_dst=ch_dst, channel_rate=ch_rate,
+                population=pop, generations=gens, rng_seed=0,
+                allowed_tiles=footprint, objective=self.objective,
+            )
+        union_orders = project_order(order, rep.binding, self.hw.n_tiles)
+        thr = (
+            1.0 / rep.period
+            if np.isfinite(rep.period) and rep.period > 0 else 0.0
+        )
+        for k, name in enumerate(names):
+            lo, hi = int(offsets[k]), int(offsets[k + 1])
+            b_app = rep.binding[lo:hi].copy()
+            self.state.allocated[name] = sorted(
+                {int(t) for t in b_app}
+            )
+            self.reports[name] = CompileReport(
+                app=name,
+                binding=b_app,
+                orders=[
+                    [a - lo for a in tile_order if lo <= a < hi]
+                    for tile_order in union_orders
+                ],
+                throughput=thr,
+                bind_time_s=rep.opt_time_s / len(names),
+                schedule_time_s=0.0,
+            )
+        event = AdmissionEvent(
+            kind="rebalance", app="*", tiles=footprint,
+            wall_s=time.perf_counter() - t0, throughput=thr,
+        )
+        if self.track_chip_metrics:
+            event.chip_throughput = thr
+            event.chip_energy = rep.energy
+        self.events.append(event)
 
     # -- introspection --------------------------------------------------
     def running(self) -> dict[str, list[int]]:

@@ -411,6 +411,34 @@ def hardware_aware_sdfg(
     return g
 
 
+def disjoint_union(graphs: Sequence[SDFG], name: str = "union") -> SDFG:
+    """Disjoint union of SDFGs: one graph with actors offset per part.
+
+    Part ``k``'s actors are relabeled by ``sum(n_actors of parts < k)``
+    (offsets are ``np.cumsum`` of the actor counts, exclusive).  No edges
+    are added between parts, so the union of live graphs is live and its
+    maximum cycle ratio is the max over the parts — until a *binding*
+    couples parts through shared-tile TDMA order cycles, which is exactly
+    the multi-app joint-placement graph the runtime layer analyzes
+    (:class:`repro.core.runtime.AdmissionController` with
+    ``placement="joint"``).
+    """
+    assert graphs, "need at least one graph"
+    offsets = np.cumsum([0] + [g.n_actors for g in graphs])
+    tables = [
+        g.channels.replace(src=g.channels.src + off, dst=g.channels.dst + off)
+        for g, off in zip(graphs, offsets[:-1])
+    ]
+    union = SDFG(
+        n_actors=int(offsets[-1]),
+        exec_time=np.concatenate([g.exec_time for g in graphs]),
+        channels=ChannelTable.concat(tables),
+        name=name,
+    )
+    union.validate()
+    return union
+
+
 def order_edges(
     static_orders: Sequence[Sequence[int]], binding: np.ndarray
 ) -> ChannelTable:

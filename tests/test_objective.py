@@ -1,0 +1,428 @@
+"""Chip-level objective layer: batched energy model, rectangular-mesh
+regression, Pareto binding optimization, multi-app joint placement, and
+per-controller compile-cache counters."""
+
+import dataclasses
+import itertools
+
+import numpy as np
+import pytest
+
+import repro.core.engine as engine_mod
+from repro.core import (
+    APP_NAMES,
+    DYNAP_SE,
+    AdmissionController,
+    HardwareConfig,
+    batch_execute,
+    build_app,
+    cut_spikes,
+    cut_spikes_batch,
+    disjoint_union,
+    mcr_howard,
+    optimize_binding,
+    partition_greedy,
+    project_order_batch,
+    score_free_tile_subsets,
+    sdfg_from_clusters,
+    single_tile_order,
+    small_app,
+    sweep,
+)
+
+HW9 = dataclasses.replace(DYNAP_SE, n_tiles=9)
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    snn = small_app(260, 3200, seed=31)
+    return partition_greedy(snn, DYNAP_SE)
+
+
+@pytest.fixture(scope="module")
+def tiny_app(tiny):
+    return sdfg_from_clusters(tiny, hw=DYNAP_SE)
+
+
+# ======================================================================
+# hardware: rectangular mesh regression (8- and 12-tile chips)
+# ======================================================================
+@pytest.mark.parametrize(
+    "n_tiles,shape", [(4, (2, 2)), (8, (2, 4)), (9, (3, 3)),
+                      (12, (3, 4)), (16, (4, 4)), (2, (1, 2))]
+)
+def test_mesh_shape_exact_factorization(n_tiles, shape):
+    hw = dataclasses.replace(DYNAP_SE, n_tiles=n_tiles)
+    c, r = hw.mesh_shape
+    assert (c, r) == shape
+    assert c * r == n_tiles                      # no out-of-mesh tiles
+
+
+@pytest.mark.parametrize("n_tiles", [8, 12])
+def test_rectangular_mesh_coordinates_and_hops(n_tiles):
+    """Regression for the old square-only isqrt mesh: on 8- and 12-tile
+    chips every tile must sit inside the declared mesh, and hop counts
+    must be a genuine Manhattan metric on that rectangle."""
+    hw = dataclasses.replace(DYNAP_SE, n_tiles=n_tiles)
+    c, r = hw.mesh_shape
+    for t in range(n_tiles):
+        assert 0 <= t % c < c and 0 <= t // c < r
+    pairs = list(itertools.product(range(n_tiles), repeat=2))
+    src = np.array([p[0] for p in pairs])
+    dst = np.array([p[1] for p in pairs])
+    hops = hw.hops_array(src, dst)
+    # vectorized == scalar, symmetric, zero-diagonal, bounded by the mesh
+    assert all(int(h) == hw.hops(int(s), int(d))
+               for s, d, h in zip(src, dst, hops))
+    h_mat = hops.reshape(n_tiles, n_tiles)
+    np.testing.assert_array_equal(h_mat, h_mat.T)
+    assert np.all(np.diag(h_mat) == 0)
+    assert h_mat.max() == (c - 1) + (r - 1)      # opposite mesh corners
+    # triangle inequality on a metric mesh
+    for a, b, m in itertools.product(range(n_tiles), repeat=3):
+        assert h_mat[a, b] <= h_mat[a, m] + h_mat[m, b]
+
+
+def test_comm_delay_array_on_rectangular_mesh():
+    hw = dataclasses.replace(DYNAP_SE, n_tiles=8)
+    src = np.array([0, 3, 7, 2])
+    dst = np.array([0, 7, 1, 2])
+    got = hw.comm_delay_array(np.full(4, 10.0), src, dst)
+    want = [hw.comm_delay(10.0, int(s), int(d)) for s, d in zip(src, dst)]
+    np.testing.assert_allclose(got, want)
+    assert got[0] == got[3] == 0.0               # same-tile pairs are free
+
+
+# ======================================================================
+# hardware: batched energy model
+# ======================================================================
+def test_energy_array_mirrors_comm_delay_array():
+    hw = DYNAP_SE
+    src = np.array([0, 0, 0, 1])
+    dst = np.array([0, 1, 3, 2])
+    rates = np.array([5.0, 5.0, 5.0, 0.0])
+    e = hw.energy_array(rates, src, dst)
+    assert e[0] == 0.0                           # co-located: free
+    assert e[3] == 0.0                           # no spikes: free
+    hops = hw.hops_array(src, dst)
+    np.testing.assert_allclose(
+        e, np.where(hops == 0, 0.0,
+                    rates * (hw.e_packet_encode + hw.e_link_hop * hops))
+    )
+    assert e[2] > e[1] > 0                       # more hops, more energy
+
+
+def test_chip_energy_terms_and_dead_rows():
+    hw = DYNAP_SE
+    e = hw.chip_energy(
+        periods=np.array([10.0, np.inf, -1.0]),
+        cut_traffic=np.array([100.0, 0.0, 0.0]),
+        spike_hops=np.array([150.0, 0.0, 0.0]),
+        tiles_used=np.array([4, 1, 1]),
+        total_spikes=1000.0,
+    )
+    want = (hw.e_spike_read * 1000.0 + hw.e_packet_encode * 100.0
+            + hw.e_link_hop * 150.0 + hw.p_tile_idle * 4 * 10.0)
+    assert e[0] == pytest.approx(want)
+    assert np.isinf(e[1]) and np.isinf(e[2])     # dead rows
+
+
+# ======================================================================
+# binding: vectorized cut_spikes
+# ======================================================================
+def test_cut_spikes_batch_matches_scalar(tiny):
+    rng = np.random.default_rng(5)
+    bindings = rng.integers(0, 4, size=(12, tiny.n_clusters))
+    got = cut_spikes_batch(tiny, bindings)
+    want = np.array([cut_spikes(tiny, b) for b in bindings])
+    np.testing.assert_allclose(got, want)
+    # single (n,) binding promotes to B=1
+    one = cut_spikes_batch(tiny, bindings[0])
+    assert one.shape == (1,)
+    assert one[0] == pytest.approx(want[0])
+
+
+# ======================================================================
+# engine: energy out of the same stacked arrays as the period
+# ======================================================================
+def test_batch_execute_with_energy_matches_manual(tiny, tiny_app):
+    rng = np.random.default_rng(11)
+    pop = rng.integers(0, 4, size=(6, tiny.n_clusters))
+    order, _ = single_tile_order(tiny, DYNAP_SE)
+    ob = project_order_batch(order, pop)
+    rep = batch_execute(tiny_app, pop, DYNAP_SE, ob, with_energy=True)
+    assert rep.energies.shape == rep.periods.shape
+    assert np.all(np.isfinite(rep.energies))
+    np.testing.assert_allclose(
+        rep.metrics.cut_traffic, cut_spikes_batch(tiny, pop)
+    )
+    hops = DYNAP_SE.hops_array(
+        pop[:, tiny.channel_src], pop[:, tiny.channel_dst]
+    )
+    s_hops = (tiny.channel_rate[None, :] * hops).sum(axis=1)
+    np.testing.assert_allclose(rep.metrics.spike_hops, s_hops)
+    tiles_used = np.array([len(set(b.tolist())) for b in pop])
+    np.testing.assert_array_equal(rep.metrics.tiles_used, tiles_used)
+    want = (
+        DYNAP_SE.e_spike_read * rep.metrics.total_spikes
+        + DYNAP_SE.e_packet_encode * rep.metrics.cut_traffic
+        + DYNAP_SE.e_link_hop * s_hops
+        + DYNAP_SE.p_tile_idle * tiles_used * rep.periods
+    )
+    np.testing.assert_allclose(rep.energies, want)
+
+
+def test_energy_objective_adds_no_stack_build(tiny, monkeypatch):
+    """The accumulators ride the stack build's own hop pass: scoring with
+    energy still builds ONE EdgeStack per generation (+ final)."""
+    calls = []
+    real = engine_mod.stack_hardware_aware
+
+    def counting(app, bindings, hw, orders_list=None, **kw):
+        calls.append(kw.get("with_metrics", False))
+        return real(app, bindings, hw, orders_list, **kw)
+
+    monkeypatch.setattr(engine_mod, "stack_hardware_aware", counting)
+    gens, pop = 3, 16
+    rep = optimize_binding(
+        tiny, DYNAP_SE, population=pop, generations=gens, rng_seed=1,
+        objective="pareto",
+    )
+    assert len(calls) == gens + 1
+    assert all(calls)                            # every build carried metrics
+    assert rep.n_stack_builds == gens + 1
+
+
+# ======================================================================
+# optimizer objectives: pareto never worse on period, energy never worse
+# than the seeds on energy
+# ======================================================================
+def test_pareto_never_worse_than_period_on_standard_apps():
+    """Acceptance invariant: at equal budget, objective="pareto" yields a
+    period <= objective="period" on every Table-1 app.  Structural: the
+    pareto trajectory is the period trajectory (same rng stream, same
+    elites), and its final exact re-score pool is a superset."""
+    for name in APP_NAMES:
+        cl = partition_greedy(build_app(name), DYNAP_SE)
+        kw = dict(population=16, generations=2, elite=4, rng_seed=9)
+        rep_p = optimize_binding(cl, DYNAP_SE, objective="period", **kw)
+        rep_x = optimize_binding(cl, DYNAP_SE, objective="pareto", **kw)
+        assert rep_x.period <= rep_p.period * (1 + 1e-9), name
+        # the front is real: non-empty, exact, non-dominated, period-sorted
+        assert rep_x.front, name
+        periods = [pt.period for pt in rep_x.front]
+        energies = [pt.energy for pt in rep_x.front]
+        assert periods == sorted(periods), name
+        assert energies == sorted(energies, reverse=True), name
+        assert rep_x.front[0].period == pytest.approx(rep_x.period), name
+
+
+def test_energy_objective_never_worse_than_seeds(tiny):
+    rep = optimize_binding(
+        tiny, DYNAP_SE, population=24, generations=3, rng_seed=3,
+        objective="energy",
+    )
+    assert np.isfinite(rep.energy)
+    assert rep.energy <= rep.best_seed_energy * (1 + 1e-9)
+    assert rep.energy <= min(rep.seed_energies.values()) * (1 + 1e-9)
+    # histories record both metrics
+    assert all(np.isfinite(h.best_energy) for h in rep.history)
+    assert all(np.isfinite(h.best_period) for h in rep.history)
+
+
+def test_objective_validation(tiny):
+    with pytest.raises(ValueError, match="unknown objective"):
+        optimize_binding(tiny, DYNAP_SE, population=8, generations=1,
+                         objective="watts")
+    with pytest.raises(ValueError, match="unknown objective"):
+        AdmissionController(DYNAP_SE, objective="watts")
+    with pytest.raises(ValueError, match="unknown placement"):
+        AdmissionController(DYNAP_SE, placement="global")
+
+
+def test_epsilon_front_period_tie_keeps_min_energy():
+    from repro.core.optimize import _epsilon_front
+
+    periods = np.array([1.0, 1.0, 2.0, 3.0])
+    energies = np.array([10.0, 5.0, 20.0, 4.0])
+    idx = _epsilon_front(periods, energies, eps=0.0)
+    # row 0 is dominated by row 1 at equal period; row 2 by both
+    assert idx.tolist() == [1, 3]
+
+
+def test_record_cache_stats_removes_by_identity():
+    """Two fresh (value-equal) sinks nesting must each unregister their
+    OWN object — value-based removal would drop the outer sink on the
+    inner exit and leave the dead inner one registered."""
+    from repro.core import CompileCacheStats
+    from repro.core.engine import _CACHE_SINKS, record_cache_stats
+
+    a, b = CompileCacheStats(), CompileCacheStats()
+    assert a == b                                # value-equal, distinct
+    with record_cache_stats(a):
+        with record_cache_stats(b):
+            assert _CACHE_SINKS[-1] is b
+        assert len(_CACHE_SINKS) == 1 and _CACHE_SINKS[-1] is a
+    assert a not in [s for s in _CACHE_SINKS if s is a]
+
+
+# ======================================================================
+# sdfg: disjoint union
+# ======================================================================
+def test_disjoint_union_mcr_is_max_of_parts():
+    a = sdfg_from_clusters(partition_greedy(small_app(150, 1800, seed=1),
+                                            DYNAP_SE), hw=DYNAP_SE)
+    b = sdfg_from_clusters(partition_greedy(small_app(200, 2400, seed=2),
+                                            DYNAP_SE), hw=DYNAP_SE)
+    u = disjoint_union([a, b])
+    assert u.n_actors == a.n_actors + b.n_actors
+    assert u.is_live()
+    assert mcr_howard(u) == pytest.approx(
+        max(mcr_howard(a), mcr_howard(b)), rel=1e-9
+    )
+
+
+# ======================================================================
+# runtime: joint placement vs isolated on a deterministic churn
+# ======================================================================
+def _churn(placement, objective="period"):
+    ctl = AdmissionController(
+        HW9, placement=placement, joint_budget=(2, 12),
+        track_chip_metrics=True, objective=objective,
+    )
+    for i in range(3):
+        snn = small_app(180, 2200, seed=50 + i)
+        snn.name = f"app{i}"
+        ctl.register(snn)
+    for i in range(3):
+        ctl.admit(f"app{i}", n_tiles_request=3)
+    return ctl
+
+
+def test_joint_placement_never_worse_than_its_isolated_seed():
+    iso = _churn("isolated")
+    joint = _churn("joint")
+    m_iso = iso.chip_metrics()
+    m_joint = joint.chip_metrics()
+    # identical workload; the isolated placement seeds every rebalance,
+    # so the chip period can only improve
+    assert m_joint["chip_period"] <= m_iso["chip_period"] * (1 + 1e-9)
+    assert m_joint["chip_throughput"] >= m_iso["chip_throughput"] * (1 - 1e-9)
+    rebalances = [e for e in joint.events if e.kind == "rebalance"]
+    assert len(rebalances) == 2                  # admits 2 and 3
+    assert all(e.chip_throughput > 0 for e in rebalances)
+    assert all(e.chip_energy > 0 and np.isfinite(e.chip_energy)
+               for e in rebalances)
+    assert not any(e.kind == "rebalance" for e in iso.events)
+
+
+def test_joint_placement_keeps_state_consistent():
+    ctl = _churn("joint")
+    for name, tiles in ctl.running().items():
+        rep = ctl.reports[name]
+        assert sorted({int(t) for t in rep.binding}) == tiles
+        assert rep.throughput > 0
+        # every cluster appears exactly once in the app's order slices
+        assert sorted(a for o in rep.orders for a in o) == list(
+            range(rep.binding.size)
+        )
+    # joint placement redistributes within the combined footprint only
+    foot = {t for ts in ctl.running().values() for t in ts}
+    assert foot <= set(range(HW9.n_tiles))
+    # eviction triggers one more rebalance over the survivors
+    ctl.evict("app0")
+    assert ctl.events[-1].kind == "rebalance"
+    assert "app0" not in ctl.running()
+
+
+def test_isolated_default_records_no_chip_metrics():
+    ctl = AdmissionController(DYNAP_SE)      # placement="isolated", no track
+    snn = small_app(150, 1800, seed=3)
+    ctl.register(snn)
+    ctl.admit(snn.name, n_tiles_request=2)
+    assert all(e.chip_throughput == 0.0 for e in ctl.events)
+    # but chip_metrics() works on demand
+    m = ctl.chip_metrics()
+    assert m["n_resident"] == 1
+    assert m["chip_throughput"] > 0 and np.isfinite(m["chip_energy"])
+
+
+# ======================================================================
+# compile-cache counters across AdmissionController lifecycles
+# ======================================================================
+def test_compile_cache_stats_across_admission_lifecycle():
+    ctl = AdmissionController(DYNAP_SE)
+    snn = small_app(200, 2400, seed=8)
+    ctl.register(snn)
+    ctl.admit(snn.name, n_tiles_request=2)
+    first = ctl.cache_stats.as_dict()
+    assert first["misses"] > 0                   # fresh shapes traced
+
+    art = ctl.artifacts[(snn.name, ctl.hw)]
+    hits_before = art.hits
+    ctl.finish(snn.name)
+    ctl.admit(snn.name, n_tiles_request=2)       # re-admission
+    # DesignArtifact cache hit: no re-clustering, no re-ordering
+    assert art.hits > hits_before
+    second = ctl.cache_stats.as_dict()
+    # shape-bucket cache hit: the same stacked shapes are re-analyzed
+    assert second["hits"] > first["hits"]
+    assert second["misses"] == first["misses"]
+    assert second["n_distinct_shapes"] == first["n_distinct_shapes"]
+
+
+def test_compile_cache_counters_do_not_leak_between_controllers():
+    snn = small_app(200, 2400, seed=8)
+    a = AdmissionController(DYNAP_SE)
+    a.register(snn)
+    a.admit(snn.name, n_tiles_request=2)
+    snapshot = a.cache_stats.as_dict()
+
+    b = AdmissionController(DYNAP_SE)
+    assert b.cache_stats.as_dict()["hits"] == 0
+    assert b.cache_stats.as_dict()["misses"] == 0
+    b.register(snn)
+    b.admit(snn.name, n_tiles_request=2)
+    # b counted its own work; a's counters did not move
+    assert b.cache_stats.as_dict()["misses"] > 0
+    assert a.cache_stats.as_dict() == snapshot
+
+
+# ======================================================================
+# explore: energy metrics in sweeps and subset scoring
+# ======================================================================
+def test_sweep_reports_energy_and_pareto_front(tiny):
+    report = sweep(
+        [tiny.snn], tile_counts=(1, 4), binders=("ours", "spinemap"),
+    )
+    assert all(np.isfinite(p.energy) and p.energy > 0 for p in report.points)
+    for p in report.points:
+        if p.n_tiles == 1:                       # everything co-located
+            assert p.cut_spikes == 0.0 and p.spike_hops == 0.0
+        assert p.spike_hops >= p.cut_spikes      # every cut spike hops >= 1
+    front = report.pareto_front(tiny.snn.name)
+    assert front
+    thrs = [p.throughput for p in front]
+    es = [p.energy for p in front]
+    assert thrs == sorted(thrs, reverse=True)
+    assert es == sorted(es, reverse=True)
+    # no survivor is dominated (incl. equal-throughput ties)
+    for p in front:
+        assert not any(
+            q.throughput >= p.throughput and q.energy < p.energy
+            for q in report.points if q.app == p.app
+        )
+    # header row gained the new columns
+    assert report.rows()[0][-2:] == ("spike_hops", "energy_pj")
+
+
+def test_score_free_tile_subsets_reports_energies(tiny):
+    hw16 = dataclasses.replace(DYNAP_SE, n_tiles=16)
+    order, _ = single_tile_order(tiny, hw16)
+    scores = score_free_tile_subsets(
+        tiny, hw16, list(range(8)), 2, order, max_candidates=16
+    )
+    assert scores.energies is not None
+    assert scores.energies.shape == scores.throughputs.shape
+    assert np.all(np.isfinite(scores.energies))
+    assert scores.best_energy in scores.subsets
