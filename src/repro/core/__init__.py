@@ -24,6 +24,8 @@ from .engine import (
     record_cache_stats,
     reset_compile_cache_stats,
     stack_hardware_aware,
+    union_component_periods,
+    weak_components,
 )
 from .explore import (
     BINDERS,
@@ -49,6 +51,7 @@ from .hardware import (
     DYNAP_SE,
     DYNAP_SE_9,
     DYNAP_SE_16,
+    DYNAP_SE_1024,
     CrossbarConfig,
     HardwareConfig,
     TileConfig,
@@ -115,5 +118,11 @@ from .sdfg import (
     sdfg_from_clusters,
 )
 from .snn import SNN, calibrate_spikes, feedforward
+from .workloads import (
+    TABLE1_FIT,
+    WorkloadSpec,
+    sample_workload,
+    workload_suite,
+)
 
 __all__ = [k for k in dir() if not k.startswith("_")]

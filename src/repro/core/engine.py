@@ -328,8 +328,13 @@ class ChipMetrics:
     Python): ``cut_traffic[b]`` is candidate b's inter-tile spikes per
     iteration (SpiNeMap's objective), ``spike_hops[b]`` the rate-weighted
     NoC hop count (the link-energy term), ``tiles_used[b]`` the number of
-    occupied tiles (the idle-leakage term), and ``total_spikes`` the
-    binding-independent spikes delivered per iteration (crossbar reads).
+    occupied tiles (the idle-leakage term), ``total_spikes`` the
+    binding-independent spikes delivered per iteration, and
+    ``read_charge`` those spikes weighted by the destination actor's mean
+    OxRAM row length (``SDFG.read_cost``): one delivered spike drives one
+    crossbar row and reads every crosspoint on it, so the crossbar read
+    energy scales with fan-out row length.  When the graph carries no
+    ``read_cost`` the charge equals ``total_spikes`` (flat model).
     Feed into :meth:`~repro.core.hardware.HardwareConfig.chip_energy`
     together with the periods to get (B,) chip energies.
     """
@@ -338,6 +343,7 @@ class ChipMetrics:
     spike_hops: np.ndarray    # (B,) rate-weighted NoC hops per iteration
     tiles_used: np.ndarray    # (B,) occupied tiles per candidate
     total_spikes: float       # spikes delivered per iteration (all rows)
+    read_charge: float        # row-length-weighted crossbar reads (all rows)
 
 
 def stack_hardware_aware(
@@ -424,11 +430,15 @@ def stack_hardware_aware(
             (np.arange(n_b)[:, None] * hw.n_tiles + bindings).ravel(),
             minlength=n_b * hw.n_tiles,
         ).reshape(n_b, hw.n_tiles)
+        read_w = (
+            app.read_cost[flow.dst] if app.read_cost is not None else 1.0
+        )
         metrics = ChipMetrics(
             cut_traffic=(flow.rate * (hops > 0)).sum(axis=1),
             spike_hops=(flow.rate * hops).sum(axis=1),
             tiles_used=(occ > 0).sum(axis=1),
             total_spikes=float(flow.rate.sum()),
+            read_charge=float((flow.rate * read_w).sum()),
         )
     base_w = (tau[base_dst] + np.concatenate(
         [keep_self.delay, np.zeros(ef), back.delay]
@@ -782,7 +792,7 @@ def batch_execute(
             metrics.cut_traffic,
             metrics.spike_hops,
             metrics.tiles_used,
-            metrics.total_spikes,
+            metrics.read_charge,
         )
     return EngineReport(
         periods=periods,
@@ -807,3 +817,101 @@ def batch_throughputs(
     return batch_execute(
         app, bindings, hw, orders_list, backend=backend, rel_tol=rel_tol
     ).throughputs
+
+
+# ======================================================================
+# per-component cycle ratios: each app's TRUE steady-state rate
+# ======================================================================
+def weak_components(n_actors: int, src, dst) -> np.ndarray:
+    """Weakly connected component labels of an edge list.
+
+    In a hardware-aware event graph every edge lies on a cycle (data
+    channels pair with buffer back-edges, order edges form tile cycles,
+    self-edges are 1-cycles), so weak components ARE the strongly
+    connected components — and the graph's maximum cycle ratio is the max
+    over its components.  Union-find with path halving; returns (n_actors,)
+    int64 labels compacted to ``0..n_components-1`` (isolated actors get
+    their own label).
+    """
+    parent = np.arange(n_actors, dtype=np.int64)
+
+    def find(x: int) -> int:
+        while parent[x] != x:
+            parent[x] = parent[parent[x]]
+            x = int(parent[x])
+        return x
+
+    for a, b in zip(
+        np.asarray(src, dtype=np.int64).tolist(),
+        np.asarray(dst, dtype=np.int64).tolist(),
+    ):
+        ra, rb = find(a), find(b)
+        if ra != rb:
+            parent[rb] = ra
+    roots = np.fromiter(
+        (find(i) for i in range(n_actors)), dtype=np.int64, count=n_actors
+    )
+    return np.unique(roots, return_inverse=True)[1]
+
+
+def union_component_periods(
+    app: SDFG,
+    binding,
+    hw: HardwareConfig,
+    orders_list: Optional[OrdersLike] = None,
+    *,
+    backend: str = "auto",
+    rel_tol: float = 1e-8,
+    with_metrics: bool = False,
+):
+    """Per-component steady-state periods of ONE bound configuration.
+
+    The union period reported by :func:`batch_execute` is the max cycle
+    ratio over the whole chip — conservative for any resident app that
+    does not sit on the chip's critical cycle.  This splits the bound
+    graph into its (weak = strong, see :func:`weak_components`) components
+    and computes every component's exact cycle ratio with ONE masked
+    :func:`~.maxplus.mcr_batch` call of batch size ``n_components``: row k
+    keeps only component k's edge weights, every other edge is ``-inf``
+    (the (max,+) neutral element), so row k's MCR is exactly component k's.
+
+    Returns ``(labels, periods)``: ``labels`` is (n_actors,) component ids,
+    ``periods`` (n_components,) each component's period.  An app's true
+    steady-state rate is ``1 / max(periods of components it touches)``.
+    With ``with_metrics=True`` returns ``(labels, periods, metrics)`` where
+    ``metrics`` is the :class:`ChipMetrics` of the same (single-row) build,
+    so callers caching per-component records pay for one stack build only.
+    """
+    binding = _as_binding_matrix(binding, app.n_actors)
+    assert binding.shape[0] == 1, "one configuration at a time"
+    metrics = None
+    if with_metrics:
+        stack, metrics = stack_hardware_aware(
+            app, binding, hw, orders_list, relax_shortcuts=True,
+            with_metrics=True,
+        )
+    else:
+        stack = stack_hardware_aware(
+            app, binding, hw, orders_list, relax_shortcuts=True
+        )
+    src, dst = stack.src[0], stack.dst[0]
+    tokens, w = stack.tokens[0], stack.weights[0]
+    live = np.isfinite(w)
+    labels = weak_components(app.n_actors, src[live], dst[live])
+    n_comp = int(labels.max(initial=-1)) + 1
+    if backend == "auto":
+        backend = "dense" if _engine_on_tpu() else "edges"
+    # row k masks every edge outside component k; shortcut edges never
+    # cross components (they compose real order-cycle paths)
+    mask = labels[src][None, :] == np.arange(max(n_comp, 1))[:, None]
+    comp_stack = EdgeStack(
+        n_actors=app.n_actors,
+        src=np.repeat(src[None, :], max(n_comp, 1), axis=0),
+        dst=np.repeat(dst[None, :], max(n_comp, 1), axis=0),
+        tokens=np.repeat(tokens[None, :], max(n_comp, 1), axis=0),
+        weights=np.where(mask, w[None, :], NEG_INF),
+    )
+    periods = mcr_batch(comp_stack, backend=backend, rel_tol=rel_tol)
+    if with_metrics:
+        return labels, periods, metrics
+    return labels, periods

@@ -206,9 +206,14 @@ def build_candidates(
             bind_mat[:, cl.channel_src], bind_mat[:, cl.channel_dst]
         )
         s_hops = (cl.channel_rate[None, :] * hops).sum(axis=1)
-        total_spikes = float(cl.channel_rate.sum())
+        # crossbar read charge: delivered spikes weighted by the target
+        # cluster's mean OxRAM row length (matches ChipMetrics.read_charge)
+        row_len = cl.synapses_used / np.maximum(cl.inputs_used, 1)
+        read_charge = float(
+            (cl.channel_rate * row_len[cl.channel_dst]).sum()
+        )
         dyn = (
-            hw.e_spike_read * total_spikes
+            hw.e_spike_read * read_charge
             + hw.e_packet_encode * cuts
             + hw.e_link_hop * s_hops
         )
@@ -341,7 +346,11 @@ def candidate_subsets(
     """k-subsets of the free tiles to score (exhaustive when small).
 
     Falls back to contiguous windows plus random samples when the binomial
-    count explodes — admission must stay fast (§5, Table 3).
+    count explodes — admission must stay fast (§5, Table 3).  The windows
+    themselves are strided down to 3/4 of the budget when the chip is
+    large (a 32x32 mesh with ~900 free tiles would otherwise emit ~900
+    window candidates and swamp the batched scorer); small chips keep
+    every window, bit-identical to the unstrided behaviour.
     """
     free = list(free)
     from math import comb
@@ -349,8 +358,15 @@ def candidate_subsets(
     if comb(len(free), k) <= max_candidates:
         return list(itertools.combinations(free, k))
     subsets: dict[tuple[int, ...], None] = {}
-    for i in range(len(free) - k + 1):           # contiguous = few NoC hops
-        subsets[tuple(free[i : i + k])] = None
+    n_windows = len(free) - k + 1                # contiguous = few NoC hops
+    if n_windows > max_candidates:
+        keep = max(1, (3 * max_candidates) // 4)
+        starts = np.unique(np.linspace(0, n_windows - 1, keep).astype(int))
+        for i in starts:
+            subsets[tuple(free[int(i) : int(i) + k])] = None
+    else:
+        for i in range(n_windows):
+            subsets[tuple(free[i : i + k])] = None
     rng = np.random.default_rng(seed)
     while len(subsets) < max_candidates:
         pick = tuple(sorted(rng.choice(len(free), size=k, replace=False)))

@@ -208,22 +208,27 @@ class HardwareConfig:
         cut_traffic: np.ndarray,
         spike_hops: np.ndarray,
         tiles_used: np.ndarray,
-        total_spikes: float,
+        read_charge: float,
     ) -> np.ndarray:
         """Total chip energy (pJ) per iteration for a batch of candidates.
 
         ``periods`` is (B,) steady-state iteration periods (us);
         ``cut_traffic`` is (B,) inter-tile spikes per iteration,
         ``spike_hops`` (B,) rate-weighted hop counts, ``tiles_used`` (B,)
-        occupied-tile counts, and ``total_spikes`` the binding-independent
-        spikes delivered per iteration (crossbar reads).  Energy =
-        crossbar reads + AER encode of the cut + link hops + idle leakage
-        of the occupied tiles over one period; rows with a dead/acyclic
-        period (non-finite or <= 0) report ``inf``.
+        occupied-tile counts, and ``read_charge`` the binding-independent
+        crossbar read charge per iteration in row-crosspoint units: each
+        delivered spike drives one crossbar row wire and reads every OxRAM
+        crosspoint on it, so a spike's charge scales with the destination
+        cluster's fan-out row length (mean crosspoints per input row).
+        Passing a plain delivered-spike count keeps the older flat
+        per-spike model (row length 1).  Energy = crossbar reads + AER
+        encode of the cut + link hops + idle leakage of the occupied tiles
+        over one period; rows with a dead/acyclic period (non-finite or
+        <= 0) report ``inf``.
         """
         periods = np.asarray(periods, dtype=np.float64)
         dyn = (
-            self.e_spike_read * total_spikes
+            self.e_spike_read * read_charge
             + self.e_packet_encode * np.asarray(cut_traffic)
             + self.e_link_hop * np.asarray(spike_hops)
         )
@@ -239,10 +244,18 @@ class HardwareConfig:
 DYNAP_SE = HardwareConfig(n_tiles=4)
 DYNAP_SE_9 = HardwareConfig(n_tiles=9)
 DYNAP_SE_16 = HardwareConfig(n_tiles=16)
+# Production-shape chip for the multi-tenant stress harness: a 32x32 mesh
+# (1024 tiles), the scale at which region-scoped joint placement pays off.
+DYNAP_SE_1024 = HardwareConfig(n_tiles=1024)
 
 
 def hardware_by_name(name: str) -> HardwareConfig:
-    table = {"dynap-se": DYNAP_SE, "dynap-se-9": DYNAP_SE_9, "dynap-se-16": DYNAP_SE_16}
+    table = {
+        "dynap-se": DYNAP_SE,
+        "dynap-se-9": DYNAP_SE_9,
+        "dynap-se-16": DYNAP_SE_16,
+        "dynap-se-1024": DYNAP_SE_1024,
+    }
     try:
         return table[name.lower()]
     except KeyError:  # pragma: no cover - defensive

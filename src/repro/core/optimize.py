@@ -365,6 +365,7 @@ def optimize_binding_graph(
     rng_seed: int = 0,
     allowed_tiles: Optional[Sequence[int]] = None,
     objective: str = "period",
+    period_floor: float = float("-inf"),
     score_rel_tol: float = 1e-4,
     final_rel_tol: float = 1e-8,
     backend: str = "auto",
@@ -394,6 +395,16 @@ def optimize_binding_graph(
     front reported for free.  The result is never worse than any seed on
     the objective metric by construction.  Deterministic for a fixed
     ``rng_seed``; ``elite`` is clamped to the population size.
+
+    ``period_floor`` is the region-scoped placement's cheap stand-in for
+    the rest of the chip: when this graph is a sub-union of the resident
+    apps, the chip period is ``max(region period, rest-of-chip period)``,
+    so candidates are *ranked* (and the final argmin taken) on
+    ``max(period, period_floor)`` — pushing the region below the floor
+    buys nothing chip-wide, and floor-ties break toward lower chip
+    energy.  The reported ``period``/``seed_periods`` stay the exact
+    unclamped sub-union periods.  The default ``-inf`` floor is a no-op
+    (bit-for-bit the unclamped ranking).
     """
     _validate_budget(population, generations, objective)
     elite = min(max(1, elite), population)
@@ -480,8 +491,13 @@ def optimize_binding_graph(
         # breeding elites: ranked by energy for the energy objective,
         # by period otherwise — the pareto trajectory is bit-for-bit the
         # period trajectory (same elites, same rng stream); what differs
-        # is the archive below
-        key = energies if objective == "energy" else periods
+        # is the archive below.  A finite period_floor clamps the ranking
+        # key (chip-wide, sub-floor periods are equivalent); the -inf
+        # default leaves the ranking bit-for-bit unchanged.
+        key = (
+            energies if objective == "energy"
+            else np.maximum(periods, period_floor)
+        )
         rank = np.argsort(key, kind="stable")
         elites = pop[rank[:elite]]
 
@@ -548,9 +564,15 @@ def optimize_binding_graph(
     final_pool = _dedup_rows(np.concatenate([seed_mat, archive]))
     final_periods, final_energies = score(final_pool, final_rel_tol)
     n_builds += 1
-    best_row = int(np.argmin(
-        final_energies if objective == "energy" else final_periods
-    ))
+    if objective == "energy":
+        best_row = int(np.argmin(final_energies))
+    elif np.isfinite(period_floor):
+        # chip-wide ranking: clamp at the rest-of-chip floor, break the
+        # (common) floor ties toward lower chip energy, then pool order
+        clamped = np.maximum(final_periods, period_floor)
+        best_row = int(np.lexsort((final_energies, clamped))[0])
+    else:
+        best_row = int(np.argmin(final_periods))
     front = [
         ParetoPoint(
             binding=final_pool[i].copy(),

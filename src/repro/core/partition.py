@@ -450,6 +450,32 @@ def partition_greedy(
             hi_w = np.full(w_count, -1, dtype=np.int64)
         nonempty = seg_lens > 0
 
+        # -- identical-window runs: neuron i chains onto neuron i-1's run
+        # when their unique-pre segments and synapse counts are equal (the
+        # conv-style generators emit long stretches of these).  A follower
+        # whose rate is not below its run head's can then be committed to
+        # the head's cluster without walking: it rejects every cluster the
+        # head rejected (all checks are shared except the buffer check,
+        # which is monotone in the rate), and it adds zero new inputs to
+        # the head's cluster — so only the output/crosspoint/buffer
+        # capacity cumsums decide how much of the run fits.
+        same_prev = np.zeros(w_count, dtype=bool)
+        if w_count > 1:
+            eq = (
+                (seg_lens[1:] == seg_lens[:-1])
+                & (n_syn_w[1:] == n_syn_w[:-1])
+                & (lo_w[1:] == lo_w[:-1])
+                & (hi_w[1:] == hi_w[:-1])
+            )
+            for p in np.flatnonzero(eq):
+                same_prev[p + 1] = bool(np.array_equal(
+                    wave_pres[seg_starts[p]:seg_starts[p] + seg_lens[p]],
+                    wave_pres[
+                        seg_starts[p + 1]:seg_starts[p + 1] + seg_lens[p + 1]
+                    ],
+                ))
+        same_prev_l = same_prev.tolist()
+
         n_blocks = (len(univ) + _F_BLOCK - 1) // _F_BLOCK
         fit = np.zeros((w_count, n_blocks * _F_BLOCK), dtype=bool)
         blk_done = np.zeros(max(n_blocks, 1), dtype=bool)
@@ -527,8 +553,10 @@ def partition_greedy(
         rate_l = rate_w.tolist()
         wave_ids_l = wave_ids.tolist()
 
-        # -- conflict-resolving placement walk (exact scalar semantics) -
-        for i in range(w_count):
+        # -- conflict-resolving placement walk (exact scalar semantics,
+        # identical-window runs bulk-committed behind each walked head) -
+        i = 0
+        while i < w_count:
             nid = wave_ids_l[i]
             npre = npre_l[i]
             nsyn = nsyn_l[i]
@@ -587,6 +615,43 @@ def partition_greedy(
             cluster_of[nid] = placed
             touched_l[placed] = True
             touch_stamp[placed] = wave_no
+
+            # bulk-commit the identical-window run behind this head: the
+            # run extends while each follower chains (same window + nsyn)
+            # and its rate is not below the HEAD's (the neuron whose walk
+            # rejections the run reuses); capacity decides how many fit.
+            i += 1
+            run_end = i
+            while (
+                run_end < w_count
+                and same_prev_l[run_end]
+                and rate_l[run_end] >= rate
+            ):
+                run_end += 1
+            if run_end > i:
+                m = run_end - i
+                m = min(m, outputs_cap - int(cl_nneur[placed]))
+                if nsyn > 0:
+                    m = min(
+                        m, (xpoints_cap - int(cl_nsyn[placed])) // nsyn
+                    )
+                if m > 0:
+                    # buffer check accumulates in the scalar loop's exact
+                    # float order, so the cutoff is bit-identical
+                    out = float(cl_out[placed])
+                    take = 0
+                    for r in rate_l[i : i + m]:
+                        if out + r > buffer_limit:
+                            break
+                        out += r
+                        take += 1
+                    m = take
+                if m > 0:
+                    cluster_of[wave_ids[i : i + m]] = placed
+                    cl_nneur[placed] += m
+                    cl_nsyn[placed] += m * nsyn
+                    cl_out[placed] = out
+                    i += m
 
         # line 11 re-sort at the exact scalar cadence (every WAVE merges);
         # np.argsort(stable) over the negated key == list.sort(key=-util)

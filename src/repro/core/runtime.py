@@ -31,6 +31,31 @@ objective (period, chip energy, or their Pareto front) by
 (isolated) placement is always a seed of that search, so joint placement
 is never worse on the scored objective by construction; the trajectory
 records chip throughput and chip energy alongside every event.
+
+At chip scale (hundreds of tiles, dozens of tenants) re-optimizing the
+WHOLE chip per event is wasteful: an admit or evict only perturbs the
+placement near its own tiles.  ``region_scope=True`` (the joint-placement
+default) therefore partitions the residents into *placement regions* —
+tile-sharing components grown over mesh adjacency — and re-optimizes only
+the affected region as a sub-union EdgeStack, holding every other app's
+binding fixed.  The slowest component OUTSIDE the region enters the search
+as a ``period_floor`` (a cheap stand-in for the rest of the chip: no
+region improvement below that floor can move the chip period, so the
+optimizer breaks floor-ties toward lower energy), and the region's
+candidate tiles are its own footprint plus nearby FREE tiles ranked by
+hop distance with a boundary penalty — never another app's tiles, so no
+new cross-region coupling can appear and the floor stays valid.  The
+current binding seeds the region search, so the chip period never
+regresses vs. the pre-event binding by construction (the PR-5 seeding
+invariant, now per region).  Every ``full_rebalance_every``-th rebalance
+— or any event whose region would cover the whole chip or exceed
+``region_max_apps`` — falls back to the exact full-union re-optimization,
+so long churns cannot drift away from the jointly-optimal placement.
+
+Chip metrics are cached per tile-sharing component (keyed on the
+residents' binding epochs): components untouched by an event are combined
+from cache instead of rebuilt, so per-event tracking cost scales with the
+event's region, not with the number of resident tenants.
 """
 
 from __future__ import annotations
@@ -47,6 +72,7 @@ from .engine import (
     batch_execute,
     project_order_batch,
     record_cache_stats,
+    union_component_periods,
 )
 from .hardware import HardwareConfig
 from .partition import ClusteredSNN, partition_greedy
@@ -204,8 +230,11 @@ class HardwareState:
 
     def free_tiles(self) -> list[int]:
         """Sorted physical tile ids not allocated to any running app."""
-        used = {t for tiles in self.allocated.values() for t in tiles}
-        return [t for t in range(self.hw.n_tiles) if t not in used]
+        mask = np.ones(self.hw.n_tiles, dtype=bool)
+        for tiles in self.allocated.values():
+            if tiles:
+                mask[np.asarray(tiles, dtype=np.int64)] = False
+        return [int(t) for t in np.flatnonzero(mask)]
 
     def release(self, app: str) -> None:
         """Free ``app``'s tiles (no-op when the app is not running)."""
@@ -369,6 +398,13 @@ class AdmissionEvent:
     rate) and its energy per iteration (pJ) — when the controller tracks
     chip metrics (always under ``placement="joint"``); 0.0 otherwise or
     when the chip is empty.
+
+    ``scope`` distinguishes rebalance flavours (``"full"`` re-optimized
+    every resident, ``"region"`` only the ``region_apps`` apps of the
+    affected placement region); ``app_throughputs`` maps each resident to
+    its TRUE steady-state rate — 1 / max period over the graph components
+    its actors touch — which is >= the conservative chip rate for any app
+    off the chip's critical cycle.
     """
 
     kind: str                 # admit | reject | finish | evict | rebalance
@@ -379,6 +415,9 @@ class AdmissionEvent:
     cache_hit: bool = False
     chip_throughput: float = 0.0   # iterations / us of the union graph
     chip_energy: float = 0.0       # pJ / iteration of the union graph
+    scope: str = ""                # rebalance events: "full" | "region"
+    region_apps: int = 0           # apps re-optimized by a region rebalance
+    app_throughputs: dict = dataclasses.field(default_factory=dict)
 
 
 def _same_application(app: Union[SNN, ClusteredSNN], art: DesignArtifact) -> bool:
@@ -425,6 +464,16 @@ class AdmissionController:
     shape-bucket compile-cache counters scoped to THIS controller
     (recorded via :func:`~repro.core.engine.record_cache_stats`, so two
     controllers never leak counters into each other).
+
+    ``region_scope`` (default: on exactly under ``placement="joint"``)
+    makes every rebalance *incremental*: only the placement region an
+    event touches is re-optimized, the rest of the chip is summarized by
+    a period floor (see the module docstring).  ``region_max_apps`` caps
+    a region's size (a larger affected region degrades the cover and
+    falls back to full), ``region_radius`` is the mesh-hop adjacency that
+    grows a region across tile-sharing components, and
+    ``full_rebalance_every=K`` forces the K-th rebalance to be a full
+    exact re-optimization (0 disables the periodic fallback).
     """
 
     def __init__(
@@ -439,6 +488,10 @@ class AdmissionController:
         joint_budget: tuple[int, int] = (2, 16),
         objective: str = "period",
         track_chip_metrics: Optional[bool] = None,
+        region_scope: Optional[bool] = None,
+        region_max_apps: int = 6,
+        full_rebalance_every: int = 8,
+        region_radius: int = 1,
     ):
         if placement not in ("isolated", "joint"):
             raise ValueError(
@@ -469,6 +522,21 @@ class AdmissionController:
             placement == "joint" if track_chip_metrics is None
             else track_chip_metrics
         )
+        # region-scoped incremental rebalancing (joint placement only):
+        # defaults on under "joint", irrelevant (but harmless) otherwise
+        self.region_scope = (
+            placement == "joint" if region_scope is None
+            else bool(region_scope)
+        )
+        self.region_max_apps = int(region_max_apps)
+        self.full_rebalance_every = int(full_rebalance_every)
+        self.region_radius = int(region_radius)
+        # per-app binding epochs key the component-metric cache: any write
+        # to an app's binding invalidates exactly the components it touches
+        self._binding_epoch: dict[str, int] = {}
+        self._epoch_counter = 0
+        self._comp_cache: dict[tuple, dict] = {}
+        self._rebalance_count = 0
         self.cache_stats = CompileCacheStats()
         self.artifacts: dict[tuple[str, HardwareConfig], DesignArtifact] = {}
         self.reports: dict[str, CompileReport] = {}
@@ -568,6 +636,7 @@ class AdmissionController:
             ))
             raise
         self.reports[art.app] = report
+        self._bump_epoch(art.app)
         event = AdmissionEvent(
             kind="admit",
             app=art.app,
@@ -579,7 +648,7 @@ class AdmissionController:
         self.events.append(event)
         self._stamp_chip_metrics(event)
         if self.placement == "joint":
-            self._rebalance()
+            self._rebalance(event_app=art.app)
         return report
 
     def _release(self, app: str, kind: str) -> list[int]:
@@ -590,6 +659,7 @@ class AdmissionController:
         tiles = sorted(self.state.allocated[app])
         self.state.release(app)
         self.reports.pop(app, None)
+        self._binding_epoch.pop(app, None)
         event = AdmissionEvent(kind=kind, app=app, tiles=tiles, wall_s=0.0)
         self.events.append(event)
         self._stamp_chip_metrics(event)
@@ -608,7 +678,7 @@ class AdmissionController:
         """
         tiles = self._release(app, "evict")
         if self.placement == "joint":
-            self._rebalance()
+            self._rebalance(freed_tiles=tiles)
         return tiles
 
     # -- chip-level placement (the union-graph objective layer) ---------
@@ -639,34 +709,187 @@ class AdmissionController:
         )
         return names, arts, union, union_order, union_binding, offsets
 
-    def chip_metrics(self) -> Optional[dict]:
+    def _sub_union(self, names: list[str]):
+        """Union view of a SUBSET of residents (same layout as
+        :meth:`_resident_union`, minus the names echo): ``(arts, union,
+        order, binding, offsets)``.  Cost scales with the subset — never
+        with the number of resident tenants."""
+        arts = [self.artifacts[(n, self.hw)] for n in names]
+        graphs = [
+            a.graph if a.graph is not None
+            else sdfg_from_clusters(a.clustered, hw=self.hw)
+            for a in arts
+        ]
+        offsets = np.cumsum([0] + [g.n_actors for g in graphs])
+        union = disjoint_union(graphs, name="sub-union")
+        order: list[int] = []
+        for art, off in zip(arts, offsets[:-1]):
+            order.extend(int(a) + int(off) for a in art.single_order)
+        binding = np.concatenate([self.reports[n].binding for n in names])
+        return arts, union, order, binding, offsets
+
+    def _bump_epoch(self, app: str) -> None:
+        """Mark ``app``'s binding as rewritten (invalidates cached comps)."""
+        self._epoch_counter += 1
+        self._binding_epoch[app] = self._epoch_counter
+
+    def _tile_components(self) -> list[list[str]]:
+        """Tile-sharing components of the residents (deterministic order).
+
+        Two apps are joined iff they share a physical tile; components are
+        exactly the units whose TDMA serialization couples — re-optimizing
+        any strict subset of a component could silently change an outside
+        app's tile cycles, so regions are always unions of whole
+        components.  Names inside a component and the component list are
+        sorted for reproducibility.
+        """
+        names = sorted(self.state.allocated)
+        parent = list(range(len(names)))
+
+        def find(i: int) -> int:
+            while parent[i] != i:
+                parent[i] = parent[parent[i]]
+                i = parent[i]
+            return i
+
+        owner: dict[int, int] = {}
+        for k, n in enumerate(names):
+            for t in self.state.allocated[n]:
+                t = int(t)
+                if t in owner:
+                    ra, rb = find(owner[t]), find(k)
+                    if ra != rb:
+                        parent[rb] = ra
+                else:
+                    owner[t] = k
+        groups: dict[int, list[str]] = {}
+        for k, n in enumerate(names):
+            groups.setdefault(find(k), []).append(n)
+        return [groups[r] for r in sorted(groups)]
+
+    def _component_record(self, comp: list[str]) -> dict:
+        """Steady-state record of ONE tile-sharing component (cached).
+
+        Keyed on each member's binding epoch: any rebalance or admission
+        that rewrites a member's binding invalidates exactly this record
+        and no other.  Stores the component period (max over its graph
+        sub-components), its dynamic energy, occupied tiles, NoC cut, and
+        every member app's TRUE per-app period.
+        """
+        key = tuple((n, self._binding_epoch.get(n, -1)) for n in comp)
+        rec = self._comp_cache.get(key)
+        if rec is not None:
+            return rec
+        _, union, order, binding, offsets = self._sub_union(comp)
+        labels, sub_periods, metrics = union_component_periods(
+            union, binding, self.hw,
+            project_order_batch(order, binding[None, :]),
+            with_metrics=True,
+        )
+        period = (
+            float(sub_periods.max()) if sub_periods.size else float("inf")
+        )
+        # same decomposition as HardwareConfig.chip_energy: dynamic terms
+        # are per-component sums, only the idle term needs the CHIP period
+        dyn = (
+            self.hw.e_spike_read * metrics.read_charge
+            + self.hw.e_packet_encode * float(metrics.cut_traffic[0])
+            + self.hw.e_link_hop * float(metrics.spike_hops[0])
+        )
+        app_periods: dict[str, float] = {}
+        for k, n in enumerate(comp):
+            lo, hi = int(offsets[k]), int(offsets[k + 1])
+            ls = np.unique(labels[lo:hi])
+            app_periods[n] = (
+                float(sub_periods[ls].max()) if ls.size else float("inf")
+            )
+        rec = {
+            "key": key,
+            "names": tuple(comp),
+            "period": period,
+            "dyn": dyn,
+            "tiles": int(metrics.tiles_used[0]),
+            "cut": float(metrics.cut_traffic[0]),
+            "app_periods": app_periods,
+        }
+        self._comp_cache[key] = rec
+        return rec
+
+    def chip_metrics(self, *, exact: bool = False) -> Optional[dict]:
         """Chip-level steady state of the current placement, or None.
 
-        One B=1 engine call on the union graph of all resident apps under
-        their current bindings and Lemma-1 projected orders.  Returns
-        ``{"chip_period", "chip_throughput", "chip_energy",
-        "chip_noc_traffic", "n_resident"}`` — period in microseconds
-        (every resident app sustains at least 1/period iterations per
-        microsecond), energy in pJ per iteration, traffic in inter-tile
-        spikes per iteration — or None when no app is resident.
+        Default: combine the cached per-component records — tile-sharing
+        components are tile-disjoint AND graph-disjoint, so the chip
+        period is the max of component periods and the chip energy is the
+        sum of component dynamic energies plus idle leakage of all
+        occupied tiles at the chip period; only components whose members'
+        bindings changed since the last call are rebuilt.  ``exact=True``
+        forces the single full-union engine call instead (one B=1
+        ``batch_execute`` over every resident — the PR-5 path, used as an
+        independent cross-check of the cached combine).
+
+        Returns ``{"chip_period", "chip_throughput", "chip_energy",
+        "chip_noc_traffic", "n_resident", "n_components",
+        "app_throughputs"}`` — period in microseconds (every resident app
+        sustains at least 1/period iterations per microsecond), energy in
+        pJ per iteration, traffic in inter-tile spikes per iteration, and
+        each app's TRUE steady-state rate (1 / max period over the graph
+        components its actors touch) — or None when no app is resident.
         """
         if not self.state.allocated:
             return None
-        _, _, union, order, binding, _ = self._resident_union()
-        with record_cache_stats(self.cache_stats):
-            rep = batch_execute(
-                union, binding, self.hw,
-                project_order_batch(order, binding[None, :]),
-                with_energy=True,
+        comps = self._tile_components()
+        if exact:
+            names, _, union, order, binding, offsets = self._resident_union()
+            with record_cache_stats(self.cache_stats):
+                ob = project_order_batch(order, binding[None, :])
+                rep = batch_execute(
+                    union, binding, self.hw, ob, with_energy=True,
+                )
+                labels, sub_periods = union_component_periods(
+                    union, binding, self.hw, ob
+                )
+            period = float(rep.periods[0])
+            energy = float(rep.energies[0])
+            cut = float(rep.metrics.cut_traffic[0])
+            app_thr: dict[str, float] = {}
+            for k, n in enumerate(names):
+                lo, hi = int(offsets[k]), int(offsets[k + 1])
+                ls = np.unique(labels[lo:hi])
+                p = float(sub_periods[ls].max()) if ls.size else float("inf")
+                app_thr[n] = 1.0 / p if np.isfinite(p) and p > 0 else 0.0
+        else:
+            with record_cache_stats(self.cache_stats):
+                recs = [self._component_record(c) for c in comps]
+            # prune records of dead configurations (evicted apps, stale
+            # epochs) so the cache tracks the resident set, not history
+            live = {r["key"] for r in recs}
+            self._comp_cache = {
+                k: v for k, v in self._comp_cache.items() if k in live
+            }
+            period = max(r["period"] for r in recs)
+            dyn = sum(r["dyn"] for r in recs)
+            tiles = sum(r["tiles"] for r in recs)
+            cut = sum(r["cut"] for r in recs)
+            energy = (
+                dyn + self.hw.p_tile_idle * tiles * period
+                if np.isfinite(period) else float("inf")
             )
-        period = float(rep.periods[0])
+            app_thr = {}
+            for r in recs:
+                for n, p in r["app_periods"].items():
+                    app_thr[n] = (
+                        1.0 / p if np.isfinite(p) and p > 0 else 0.0
+                    )
         alive = np.isfinite(period) and period > 0
         return {
             "chip_period": period,
             "chip_throughput": 1.0 / period if alive else 0.0,
-            "chip_energy": float(rep.energies[0]),
-            "chip_noc_traffic": float(rep.metrics.cut_traffic[0]),
+            "chip_energy": energy,
+            "chip_noc_traffic": cut,
             "n_resident": len(self.state.allocated),
+            "n_components": len(comps),
+            "app_throughputs": app_thr,
         }
 
     def _stamp_chip_metrics(self, event: AdmissionEvent) -> None:
@@ -677,23 +900,155 @@ class AdmissionController:
         if m is not None:
             event.chip_throughput = m["chip_throughput"]
             event.chip_energy = m["chip_energy"]
+            event.app_throughputs = dict(m["app_throughputs"])
 
-    def _rebalance(self) -> None:
-        """Jointly re-place all resident apps (``placement="joint"``).
+    def _rebalance(
+        self,
+        *,
+        event_app: Optional[str] = None,
+        freed_tiles: Optional[list[int]] = None,
+    ) -> None:
+        """Re-place residents after an event (``placement="joint"``).
+
+        Dispatch: without ``region_scope`` — or every
+        ``full_rebalance_every``-th call, or when the affected region
+        covers all residents — run the exact full-union re-optimization
+        (:meth:`_rebalance_full`, the PR-5 path).  An eviction whose
+        freed tiles border no resident component is a no-op (nothing can
+        move, and losing a component only lowers the chip period).
+        Otherwise re-optimize only the placement region the event
+        touches (:meth:`_rebalance_region`): the tile-sharing
+        component(s) of ``event_app`` on admit, the components within
+        ``region_radius`` mesh hops of ``freed_tiles`` on evict, grown
+        over component adjacency up to the cap.
+        """
+        if len(self.state.allocated) < 2:
+            return
+        self._rebalance_count += 1
+        if not self.region_scope:
+            self._rebalance_full()
+            return
+        if (
+            self.full_rebalance_every
+            and self._rebalance_count % self.full_rebalance_every == 0
+        ):
+            self._rebalance_full()
+            return
+        region = self._affected_region(
+            event_app=event_app, freed_tiles=freed_tiles
+        )
+        if not region:
+            # an isolated eviction: the freed tiles border no resident
+            # component, so no placement can change — and dropping a
+            # component can only LOWER the chip period (max over fewer
+            # components).  Nothing to re-optimize.
+            if region is not None and freed_tiles:
+                return
+            self._rebalance_full()
+        elif len(region) >= len(self.state.allocated):
+            self._rebalance_full()
+        else:
+            self._rebalance_region(region)
+
+    def _affected_region(
+        self,
+        *,
+        event_app: Optional[str] = None,
+        freed_tiles: Optional[list[int]] = None,
+    ) -> Optional[list[str]]:
+        """Resident apps whose placement the event may affect.
+
+        Seeds from the tile-sharing component(s) the event touches, then
+        grows across components whose tile footprints sit within
+        ``region_radius`` mesh hops of each other (deterministically, in
+        sorted component order) while the region stays within
+        ``region_max_apps``.  A seed above the cap is trimmed to the
+        nearest whole components (the event app's component is always
+        kept, even alone above the cap — any union of whole components
+        is a sound region); an empty list means no resident is affected.
+        Returns the sorted app names.
+        """
+        comps = self._tile_components()
+        if not comps:
+            return []
+        foots = [
+            np.asarray(
+                sorted({int(t) for n in c for t in self.state.allocated[n]}),
+                dtype=np.int64,
+            )
+            for c in comps
+        ]
+        seed: set[int] = set()
+        seed_dist: dict[int, float] = {}
+        if event_app is not None:
+            for i, c in enumerate(comps):
+                if event_app in c:
+                    seed.add(i)
+                    seed_dist[i] = 0.0
+        if freed_tiles:
+            ft = np.asarray(sorted(freed_tiles), dtype=np.int64)
+            for i, f in enumerate(foots):
+                if f.size:
+                    d = int(
+                        self.hw.hops_array(ft[:, None], f[None, :]).min()
+                    )
+                    if d <= self.region_radius:
+                        seed.add(i)
+                        seed_dist.setdefault(i, float(d))
+        if not seed:
+            return []
+        if sum(len(comps[i]) for i in seed) > self.region_max_apps:
+            # over-cap seed (many components bordering the freed tiles,
+            # or a component snowballed by a past full rebalance): trim
+            # to the nearest whole components.  The first — the event
+            # component — is kept even alone above the cap; dropping the
+            # rest only narrows the re-optimization, never breaks it.
+            picked: list[int] = []
+            total = 0
+            for i in sorted(seed, key=lambda i: (seed_dist[i], i)):
+                if picked and total + len(comps[i]) > self.region_max_apps:
+                    break
+                picked.append(i)
+                total += len(comps[i])
+            seed = set(picked)
+            if total > self.region_max_apps:
+                return sorted({n for i in seed for n in comps[i]})
+        region = set(seed)
+        grew = True
+        while grew:
+            grew = False
+            for i in sorted(region):
+                for j, f in enumerate(foots):
+                    if j in region or not f.size or not foots[i].size:
+                        continue
+                    near = int(
+                        self.hw.hops_array(
+                            foots[i][:, None], f[None, :]
+                        ).min()
+                    ) <= self.region_radius
+                    fits = (
+                        sum(len(comps[k]) for k in region) + len(comps[j])
+                        <= self.region_max_apps
+                    )
+                    if near and fits:
+                        region.add(j)
+                        grew = True
+        return sorted({n for i in region for n in comps[i]})
+
+    def _rebalance_full(self) -> None:
+        """Jointly re-place ALL resident apps (the exact PR-5 path).
 
         Runs :func:`~repro.core.optimize.optimize_binding_graph` on the
         disjoint-union graph over the residents' combined tile footprint
         (free tiles are NOT consumed — joint placement redistributes, and
-        may even shrink, the existing allocation).  The current isolated
-        placement seeds the search, so the chip objective never regresses;
-        shared-tile serialization is modeled exactly by the union order
-        cycles the projection produces.  Per-app reports are updated with
-        the (conservative) union throughput and each app's slice of the
-        union schedule; the trajectory records a ``"rebalance"`` event
-        with the new chip throughput and energy.
+        may even shrink, the existing allocation).  The current
+        placement seeds the search, so the chip objective never
+        regresses; shared-tile serialization is modeled exactly by the
+        union order cycles the projection produces.  Per-app reports are
+        updated with the (conservative) union throughput and each app's
+        slice of the union schedule; the trajectory records a
+        ``"rebalance"`` event with the new chip throughput and energy.
         """
-        if len(self.state.allocated) < 2:
-            return
         from .optimize import optimize_binding_graph
 
         t0 = time.perf_counter()
@@ -743,14 +1098,168 @@ class AdmissionController:
                 bind_time_s=rep.opt_time_s / len(names),
                 schedule_time_s=0.0,
             )
+            self._bump_epoch(name)
         event = AdmissionEvent(
             kind="rebalance", app="*", tiles=footprint,
             wall_s=time.perf_counter() - t0, throughput=thr,
+            scope="full", region_apps=len(names),
         )
         if self.track_chip_metrics:
             event.chip_throughput = thr
             event.chip_energy = rep.energy
+            m = self.chip_metrics()
+            if m is not None:
+                event.app_throughputs = dict(m["app_throughputs"])
         self.events.append(event)
+
+    def _rebalance_region(self, names: list[str]) -> None:
+        """Re-place ONLY the apps of one affected placement region.
+
+        The region is processed one tile-sharing COMPONENT at a time:
+        each component's sub-union is optimized over its own footprint
+        plus nearby FREE tiles — ranked by mesh-hop distance to the
+        component with a penalty for tiles bordering an outside app (the
+        cheap region-boundary traffic term) and never including another
+        app's tiles (sibling components included, since the state is
+        written back between components), so no new cross-component
+        coupling can appear and components never MERGE during region
+        rebalances — region cost stays bounded by component size instead
+        of snowballing as the optimizer compacts tenants together.
+        Cross-component co-location (a global, occasionally-worthwhile
+        move) remains available to the periodic full fallback.
+
+        Everything OUTSIDE the component under optimization enters as
+        ``period_floor``: candidates are ranked on ``max(component
+        period, floor)`` and floor-ties break toward lower energy,
+        because no local improvement below the floor can move the chip
+        period.  The current binding seeds each search, so the chip
+        period never regresses vs. the pre-event binding by construction
+        (the floor handed to each component never exceeds the pre-event
+        chip period).
+        """
+        t0 = time.perf_counter()
+        region = set(names)
+        comps = [
+            sorted(c) for c in self._tile_components() if region & set(c)
+        ]
+        out_periods = [
+            self._component_record(c)["period"]
+            for c in self._tile_components()
+            if not region & set(c)
+        ]
+        # current period of every region component (cached records)
+        comp_periods = [
+            self._component_record(c)["period"] for c in comps
+        ]
+        for k, comp in enumerate(comps):
+            floor = max(
+                out_periods + comp_periods[:k] + comp_periods[k + 1:],
+                default=float("-inf"),
+            )
+            comp_periods[k] = self._optimize_component(comp, floor)
+        m = self.chip_metrics()
+        thr = m["chip_throughput"] if m is not None else 0.0
+        for name in names:
+            self.reports[name].throughput = thr
+        event = AdmissionEvent(
+            kind="rebalance", app="*",
+            tiles=sorted(
+                {int(t) for n in names for t in self.state.allocated[n]}
+            ),
+            wall_s=time.perf_counter() - t0, throughput=thr,
+            scope="region", region_apps=len(names),
+        )
+        if self.track_chip_metrics and m is not None:
+            event.chip_throughput = thr
+            event.chip_energy = m["chip_energy"]
+            event.app_throughputs = dict(m["app_throughputs"])
+        self.events.append(event)
+
+    def _optimize_component(self, names: list[str], floor: float) -> float:
+        """Re-optimize ONE tile-sharing component against ``floor``.
+
+        Seeds from the current binding, searches the component footprint
+        plus a few ranked free tiles, writes the result back (bindings,
+        allocations, projected orders, epochs) and returns the
+        component's new (floor-clamped) period.  Oversized components —
+        possible only after a full rebalance co-located many tenants —
+        get a reduced search budget so per-event latency stays bounded.
+        """
+        from .optimize import optimize_binding_graph
+
+        arts, union, order, binding, offsets = self._sub_union(names)
+        footprint = sorted(
+            {int(t) for n in names for t in self.state.allocated[n]}
+        )
+        # candidate tiles: region footprint + the closest free tiles,
+        # boundary-penalized (outside apps' tiles are NEVER candidates)
+        allowed = list(footprint)
+        free = np.asarray(self.state.free_tiles(), dtype=np.int64)
+        if free.size and footprint:
+            fp = np.asarray(footprint, dtype=np.int64)
+            dist = self.hw.hops_array(free[:, None], fp[None, :]).min(axis=1)
+            outside = sorted({
+                int(t)
+                for n, ts in self.state.allocated.items()
+                if n not in names
+                for t in ts
+            })
+            penalty = np.zeros(free.size)
+            if outside:
+                ot = np.asarray(outside, dtype=np.int64)
+                d_out = self.hw.hops_array(
+                    free[:, None], ot[None, :]
+                ).min(axis=1)
+                penalty = np.where(d_out <= 1, 2.0, 0.0)
+            rank = np.argsort(dist + penalty, kind="stable")
+            n_extra = max(4, len(footprint))
+            allowed = sorted(
+                set(footprint) | {int(t) for t in free[rank[:n_extra]]}
+            )
+        gens, pop = self.joint_budget
+        if len(names) > self.region_max_apps:
+            gens = 1
+            pop = max(2, (pop * self.region_max_apps) // len(names))
+        ch_src = np.concatenate([
+            a.clustered.channel_src + off
+            for a, off in zip(arts, offsets[:-1])
+        ])
+        ch_dst = np.concatenate([
+            a.clustered.channel_dst + off
+            for a, off in zip(arts, offsets[:-1])
+        ])
+        ch_rate = np.concatenate(
+            [a.clustered.channel_rate for a in arts]
+        )
+        with record_cache_stats(self.cache_stats):
+            rep = optimize_binding_graph(
+                union, self.hw, order,
+                seed_bindings={"current": binding},
+                channel_src=ch_src, channel_dst=ch_dst, channel_rate=ch_rate,
+                population=pop, generations=gens, rng_seed=0,
+                allowed_tiles=allowed, objective=self.objective,
+                period_floor=floor,
+            )
+        union_orders = project_order(order, rep.binding, self.hw.n_tiles)
+        for k, name in enumerate(names):
+            lo, hi = int(offsets[k]), int(offsets[k + 1])
+            b_app = rep.binding[lo:hi].copy()
+            self.state.allocated[name] = sorted(
+                {int(t) for t in b_app}
+            )
+            self.reports[name] = CompileReport(
+                app=name,
+                binding=b_app,
+                orders=[
+                    [a - lo for a in tile_order if lo <= a < hi]
+                    for tile_order in union_orders
+                ],
+                throughput=0.0,   # patched to the chip rate below
+                bind_time_s=rep.opt_time_s / len(names),
+                schedule_time_s=0.0,
+            )
+            self._bump_epoch(name)
+        return max(float(rep.period), floor)
 
     # -- introspection --------------------------------------------------
     def running(self) -> dict[str, list[int]]:

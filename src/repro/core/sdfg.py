@@ -201,10 +201,17 @@ class SDFG:
     exec_time: np.ndarray               # (n_actors,) tau_i
     channels: ChannelTable
     name: str = "sdfg"
+    # (n_actors,) mean crossbar row length of each actor: OxRAM crosspoints
+    # read per delivered spike (synapses / distinct input rows).  None means
+    # "row length 1" — the flat per-spike read model of hand-built graphs.
+    read_cost: Optional[np.ndarray] = None
 
     def __post_init__(self) -> None:
         if not isinstance(self.channels, ChannelTable):
             self.channels = as_channel_table(self.channels)
+        if self.read_cost is not None:
+            self.read_cost = np.asarray(self.read_cost, dtype=np.float64)
+            assert self.read_cost.shape == (self.n_actors,)
 
     @property
     def table(self) -> ChannelTable:
@@ -319,6 +326,11 @@ def sdfg_from_clusters(
         exec_time=exec_time,
         channels=ChannelTable.concat([self_edges, data_edges]),
         name=clustered.snn.name,
+        # mean OxRAM row length per cluster: a spike delivered to cluster c
+        # drives one row wire and reads every crosspoint on it, so its read
+        # charge scales with synapses-per-input-row, not a flat unit
+        read_cost=clustered.synapses_used
+        / np.maximum(clustered.inputs_used, 1),
     )
     g.validate()
     assert g.is_live(), "clustered SDFG must be deadlock-free (Alg.1 line 13)"
@@ -429,11 +441,19 @@ def disjoint_union(graphs: Sequence[SDFG], name: str = "union") -> SDFG:
         g.channels.replace(src=g.channels.src + off, dst=g.channels.dst + off)
         for g, off in zip(graphs, offsets[:-1])
     ]
+    if any(g.read_cost is not None for g in graphs):
+        read_cost = np.concatenate([
+            g.read_cost if g.read_cost is not None else np.ones(g.n_actors)
+            for g in graphs
+        ])
+    else:
+        read_cost = None
     union = SDFG(
         n_actors=int(offsets[-1]),
         exec_time=np.concatenate([g.exec_time for g in graphs]),
         channels=ChannelTable.concat(tables),
         name=name,
+        read_cost=read_cost,
     )
     union.validate()
     return union

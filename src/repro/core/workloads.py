@@ -1,0 +1,194 @@
+"""Parameterized synthetic SNN workloads (chip-scale stress tenants).
+
+The eight Table-1 applications (:mod:`repro.core.apps`) are single data
+points; stressing a 1024-tile chip needs *hundreds* of tenants with the
+same statistical character.  This module fits the Table-1 population —
+layer topologies, synapses-per-neuron (fan-in) and per-iteration
+spikes-per-neuron (firing rate) — and samples arbitrarily many tenants
+from those distributions:
+
+  * the layer SHAPE is drawn from the Table-1 topology templates (relative
+    widths jittered multiplicatively, then scaled to the drawn neuron
+    total), so the conv-style window sharing that Alg.-1 bin-packing
+    exploits is preserved;
+  * synapses-per-neuron and spikes-per-neuron are drawn log-normally with
+    the log-mean/log-std of the Table-1 apps (both quantities span more
+    than an order of magnitude across the eight apps, so a normal fit
+    would be badly wrong);
+  * the recurrence probability equals the Table-1 frequency (1/8).
+
+``scale`` shrinks the neuron-count range without touching the per-neuron
+distributions: a ``scale=0.1`` tenant is a statistically faithful
+miniature, sized so hundreds fit a mesh at a few tiles each.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Union
+
+import numpy as np
+
+from .apps import APP_SPECS
+from .snn import SNN, calibrate_spikes, feedforward
+
+__all__ = [
+    "WorkloadSpec",
+    "TABLE1_FIT",
+    "sample_workload",
+    "workload_suite",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkloadSpec:
+    """Distribution parameters of a synthetic tenant population.
+
+    ``neurons_range`` is sampled log-uniformly (the Table-1 neuron counts
+    span 980..24732); ``syn_per_neuron`` / ``spikes_per_neuron`` are
+    (log-mean, log-std) of log-normal draws; ``templates`` holds the
+    relative layer-width shapes the topology is drawn from;
+    ``width_jitter`` is the multiplicative layer-width noise (log-uniform
+    in [1/j, j]); ``recurrent_p`` the probability of a feedback edge.
+    """
+
+    neurons_range: tuple[int, int]
+    syn_per_neuron: tuple[float, float]      # (mu, sigma) of log
+    spikes_per_neuron: tuple[float, float]   # (mu, sigma) of log
+    templates: tuple[tuple[int, ...], ...]
+    width_jitter: float = 1.3
+    recurrent_p: float = 0.125
+    min_syn_per_neuron: float = 4.0
+    max_syn_per_neuron: float = 512.0
+
+
+def _fit_table1() -> WorkloadSpec:
+    """Log-space moment fit of the Table-1 application population."""
+    specs = list(APP_SPECS.values())
+    spn = np.array([s.synapses / s.neurons for s in specs])
+    rate = np.array(
+        [s.spikes / s.recorded_iters / s.neurons for s in specs]
+    )
+    return WorkloadSpec(
+        neurons_range=(
+            min(s.neurons for s in specs), max(s.neurons for s in specs)
+        ),
+        syn_per_neuron=(
+            float(np.mean(np.log(spn))), float(np.std(np.log(spn)))
+        ),
+        spikes_per_neuron=(
+            float(np.mean(np.log(rate))), float(np.std(np.log(rate)))
+        ),
+        templates=tuple(tuple(s.layer_shape) for s in specs),
+        recurrent_p=sum(s.recurrent for s in specs) / len(specs),
+    )
+
+
+#: The Table-1 population fit (computed once at import; APP_SPECS is
+#: frozen, so this is deterministic).
+TABLE1_FIT: WorkloadSpec = _fit_table1()
+
+
+def _sample_layers(
+    rng: np.random.Generator, spec: WorkloadSpec, n_neurons: int
+) -> list[int]:
+    """Draw a layer topology: jittered template scaled to ``n_neurons``."""
+    shape = np.asarray(
+        spec.templates[int(rng.integers(len(spec.templates)))],
+        dtype=np.float64,
+    )
+    jitter = np.exp(
+        rng.uniform(
+            -np.log(spec.width_jitter), np.log(spec.width_jitter),
+            size=shape.size,
+        )
+    )
+    shape = shape * jitter
+    raw = shape * (n_neurons / shape.sum())
+    widths = np.maximum(np.floor(raw).astype(np.int64), 2)
+    # largest-remainder top-up to the exact neuron total
+    rem = n_neurons - int(widths.sum())
+    if rem > 0:
+        order = np.argsort(raw - widths)[::-1]
+        widths[order[np.arange(rem) % widths.size]] += 1
+    elif rem < 0:
+        order = np.argsort(raw - widths)
+        k = 0
+        while rem < 0:
+            i = order[k % widths.size]
+            if widths[i] > 2:
+                widths[i] -= 1
+                rem += 1
+            k += 1
+    return [int(w) for w in widths]
+
+
+def sample_workload(
+    seed_or_rng: Union[int, np.random.Generator],
+    *,
+    spec: WorkloadSpec = TABLE1_FIT,
+    scale: float = 1.0,
+    name: Optional[str] = None,
+) -> SNN:
+    """Sample ONE synthetic tenant from the fitted population.
+
+    ``scale`` multiplies the neuron-count range (per-neuron fan-in and
+    firing-rate distributions are scale-free); ``name`` defaults to a
+    draw-derived identifier.  Deterministic given the seed / generator
+    state.
+    """
+    rng = (
+        seed_or_rng
+        if isinstance(seed_or_rng, np.random.Generator)
+        else np.random.default_rng(seed_or_rng)
+    )
+    lo, hi = spec.neurons_range
+    lo = max(8, int(round(lo * scale)))
+    hi = max(lo + 1, int(round(hi * scale)))
+    n_neurons = int(np.exp(rng.uniform(np.log(lo), np.log(hi))))
+    n_neurons = int(np.clip(n_neurons, lo, hi))
+    layers = _sample_layers(rng, spec, n_neurons)
+    mu, sg = spec.syn_per_neuron
+    spn = float(
+        np.clip(
+            np.exp(rng.normal(mu, sg)),
+            spec.min_syn_per_neuron, spec.max_syn_per_neuron,
+        )
+    )
+    # cap at the topology's connectivity capacity (the generator clamps
+    # internally too, but an explicit cap keeps the EXACT-total invariant)
+    cap = sum(a * b for a, b in zip(layers[:-1], layers[1:]))
+    n_syn = int(np.clip(round(spn * n_neurons), n_neurons, max(cap, n_neurons)))
+    recurrent = bool(rng.random() < spec.recurrent_p)
+    gen_seed = int(rng.integers(2**31 - 1))
+    snn = feedforward(
+        layers, n_syn,
+        seed=gen_seed,
+        name=name or f"wl-{gen_seed:08x}",
+        recurrent=recurrent,
+    )
+    mu_r, sg_r = spec.spikes_per_neuron
+    rate = float(np.exp(rng.normal(mu_r, sg_r)))
+    return calibrate_spikes(
+        snn, max(1.0, rate * n_neurons), seed=gen_seed + 7
+    )
+
+
+def workload_suite(
+    n: int,
+    *,
+    seed: int = 0,
+    spec: WorkloadSpec = TABLE1_FIT,
+    scale: float = 1.0,
+    name_prefix: str = "tenant",
+) -> list[SNN]:
+    """Sample ``n`` distinct tenants from one generator stream.
+
+    Names are ``{name_prefix}{i}`` — stable identifiers for admission
+    controllers and trajectory logs.
+    """
+    rng = np.random.default_rng(seed)
+    return [
+        sample_workload(rng, spec=spec, scale=scale, name=f"{name_prefix}{i}")
+        for i in range(n)
+    ]

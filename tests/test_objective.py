@@ -49,7 +49,8 @@ def tiny_app(tiny):
 # ======================================================================
 @pytest.mark.parametrize(
     "n_tiles,shape", [(4, (2, 2)), (8, (2, 4)), (9, (3, 3)),
-                      (12, (3, 4)), (16, (4, 4)), (2, (1, 2))]
+                      (12, (3, 4)), (16, (4, 4)), (2, (1, 2)),
+                      (1024, (32, 32))]
 )
 def test_mesh_shape_exact_factorization(n_tiles, shape):
     hw = dataclasses.replace(DYNAP_SE, n_tiles=n_tiles)
@@ -119,7 +120,7 @@ def test_chip_energy_terms_and_dead_rows():
         cut_traffic=np.array([100.0, 0.0, 0.0]),
         spike_hops=np.array([150.0, 0.0, 0.0]),
         tiles_used=np.array([4, 1, 1]),
-        total_spikes=1000.0,
+        read_charge=1000.0,
     )
     want = (hw.e_spike_read * 1000.0 + hw.e_packet_encode * 100.0
             + hw.e_link_hop * 150.0 + hw.p_tile_idle * 4 * 10.0)
@@ -163,8 +164,16 @@ def test_batch_execute_with_energy_matches_manual(tiny, tiny_app):
     np.testing.assert_allclose(rep.metrics.spike_hops, s_hops)
     tiles_used = np.array([len(set(b.tolist())) for b in pop])
     np.testing.assert_array_equal(rep.metrics.tiles_used, tiles_used)
+    # crossbar reads scale with the target cluster's mean row length
+    row_len = tiny.synapses_used / np.maximum(tiny.inputs_used, 1)
+    read_charge = float(
+        (np.maximum(tiny.channel_rate, 1e-6)
+         * row_len[tiny.channel_dst]).sum()
+    )
+    assert rep.metrics.read_charge == pytest.approx(read_charge)
+    assert rep.metrics.read_charge > rep.metrics.total_spikes  # rows > 1
     want = (
-        DYNAP_SE.e_spike_read * rep.metrics.total_spikes
+        DYNAP_SE.e_spike_read * rep.metrics.read_charge
         + DYNAP_SE.e_packet_encode * rep.metrics.cut_traffic
         + DYNAP_SE.e_link_hop * s_hops
         + DYNAP_SE.p_tile_idle * tiles_used * rep.periods

@@ -1,0 +1,198 @@
+"""Region-scoped joint placement, component-cached chip metrics, and the
+chip-scale workload generator (PR 6)."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    DYNAP_SE,
+    DYNAP_SE_1024,
+    AdmissionController,
+    small_app,
+)
+from repro.core.workloads import TABLE1_FIT, sample_workload, workload_suite
+
+HW64 = dataclasses.replace(DYNAP_SE, n_tiles=64)
+
+
+def _apps(n, seed0=70, prefix="r"):
+    apps = []
+    for i in range(n):
+        snn = small_app(150, 1800, seed=seed0 + i)
+        snn.name = f"{prefix}{i}"
+        apps.append(snn)
+    return apps
+
+
+def _drive(ctl, prefix="r"):
+    """A fixed admit/evict/finish churn (deterministic)."""
+    apps = _apps(6, seed0=90, prefix=prefix)
+    for a in apps:
+        ctl.register(a)
+    for a in apps[:5]:
+        ctl.admit(a.name, n_tiles_request=3)
+    ctl.evict(apps[1].name)
+    ctl.admit(apps[5].name, n_tiles_request=3)
+    ctl.finish(apps[2].name)
+    ctl.admit(apps[1].name, n_tiles_request=2)
+    return ctl
+
+
+# ======================================================================
+# tentpole: region-scoped incremental rebalancing
+# ======================================================================
+def test_region_rebalances_never_regress_chip_throughput():
+    """On a 32x32 mesh the regions stay strictly smaller than the chip;
+    every rebalance (region or full) must hold the seeding invariant:
+    chip throughput never worse than the pre-event binding."""
+    ctl = AdmissionController(
+        DYNAP_SE_1024, placement="joint", joint_budget=(2, 8),
+        track_chip_metrics=True,
+    )
+    apps = _apps(10, seed0=120)
+    for a in apps:
+        ctl.register(a)
+    for a in apps:
+        ctl.admit(a.name, n_tiles_request=2)
+    ctl.evict(apps[0].name)
+    ctl.evict(apps[5].name)
+
+    prev = None
+    for e in ctl.events:
+        if e.kind == "rebalance" and prev is not None and prev > 0:
+            assert e.chip_throughput >= prev * (1 - 1e-6), (
+                e.scope, e.chip_throughput, prev
+            )
+        if e.chip_throughput > 0:
+            prev = e.chip_throughput
+    scopes = {e.scope for e in ctl.events if e.kind == "rebalance"}
+    assert "region" in scopes          # incremental path actually exercised
+    region_evs = [
+        e for e in ctl.events
+        if e.kind == "rebalance" and e.scope == "region"
+    ]
+    assert all(
+        0 < e.region_apps < len(apps) for e in region_evs
+    )
+
+
+def test_forced_full_fallback_bit_identical_to_unscoped():
+    """``full_rebalance_every=1`` must reduce EXACTLY to the always-full
+    (PR-5) behaviour: same events, same allocations, same bindings."""
+    a = _drive(AdmissionController(
+        HW64, placement="joint", joint_budget=(2, 8),
+        track_chip_metrics=True, region_scope=False,
+    ), prefix="fa")
+    b = _drive(AdmissionController(
+        HW64, placement="joint", joint_budget=(2, 8),
+        track_chip_metrics=True, region_scope=True,
+        full_rebalance_every=1,
+    ), prefix="fb")
+    assert [e.kind for e in a.events] == [e.kind for e in b.events]
+    assert all(
+        e.scope == "full" for e in b.events if e.kind == "rebalance"
+    )
+    ra = {n[2:]: sorted(t) for n, t in a.running().items()}
+    rb = {n[2:]: sorted(t) for n, t in b.running().items()}
+    assert ra == rb
+    for n in a.reports:
+        assert np.array_equal(
+            a.reports[n].binding, b.reports["fb" + n[2:]].binding
+        )
+        assert a.reports[n].orders == b.reports["fb" + n[2:]].orders
+
+
+def test_cached_component_combine_matches_exact_union():
+    """The component-cached chip metrics must agree with the single
+    full-union engine call (they are the same quantity by tile/graph
+    disjointness of the components)."""
+    ctl = _drive(AdmissionController(
+        HW64, placement="joint", joint_budget=(2, 8),
+        track_chip_metrics=True,
+    ), prefix="cx")
+    m = ctl.chip_metrics()
+    x = ctl.chip_metrics(exact=True)
+    assert m["n_resident"] == x["n_resident"]
+    assert m["chip_period"] == pytest.approx(x["chip_period"], rel=1e-6)
+    assert m["chip_energy"] == pytest.approx(x["chip_energy"], rel=1e-6)
+    assert m["chip_noc_traffic"] == pytest.approx(
+        x["chip_noc_traffic"], rel=1e-9, abs=1e-9
+    )
+    assert set(m["app_throughputs"]) == set(x["app_throughputs"])
+    for n, thr in m["app_throughputs"].items():
+        assert thr == pytest.approx(x["app_throughputs"][n], rel=1e-6)
+
+
+def test_per_app_rates_dominate_chip_rate():
+    """An app's true steady-state rate is 1/max over the components it
+    touches — never below the conservative whole-chip rate; trajectory
+    events carry the same per-app dict."""
+    ctl = _drive(AdmissionController(
+        HW64, placement="joint", joint_budget=(2, 8),
+        track_chip_metrics=True,
+    ), prefix="pa")
+    m = ctl.chip_metrics()
+    assert m["chip_throughput"] > 0
+    assert set(m["app_throughputs"]) == set(ctl.running())
+    for thr in m["app_throughputs"].values():
+        assert thr >= m["chip_throughput"] * (1 - 1e-9)
+    stamped = [
+        e for e in ctl.events
+        if e.kind in ("admit", "rebalance") and e.app_throughputs
+    ]
+    assert stamped
+    last = ctl.events[-1]
+    assert set(last.app_throughputs) == set(ctl.running())
+
+
+def test_component_cache_reuses_untouched_components():
+    """Metrics calls after an unrelated event must rebuild only the
+    touched component's record."""
+    ctl = AdmissionController(
+        HW64, placement="joint", joint_budget=(2, 8),
+        track_chip_metrics=True, region_scope=True,
+    )
+    apps = _apps(4, seed0=150, prefix="cc")
+    for a in apps:
+        ctl.register(a)
+    for a in apps:
+        ctl.admit(a.name, n_tiles_request=2)
+    ctl.chip_metrics()
+    cached_before = set(ctl._comp_cache)
+    assert cached_before
+    ctl.chip_metrics()              # no event in between: no new records
+    assert set(ctl._comp_cache) == cached_before
+
+
+# ======================================================================
+# satellite: synthetic workload generator
+# ======================================================================
+def test_workload_suite_deterministic_and_scaled():
+    a = workload_suite(5, seed=9, scale=0.05)
+    b = workload_suite(5, seed=9, scale=0.05)
+    assert [s.name for s in a] == [f"tenant{i}" for i in range(5)]
+    for x, y in zip(a, b):
+        assert np.array_equal(x.pre, y.pre)
+        assert np.array_equal(x.post, y.post)
+        assert np.array_equal(x.spikes, y.spikes)
+    lo, hi = TABLE1_FIT.neurons_range
+    for s in a:
+        assert 8 <= s.n_neurons <= int(hi * 0.05) + 1
+        assert s.n_synapses >= s.n_neurons
+        assert float(s.spikes.sum()) > 0
+
+
+def test_workload_fit_matches_table1_statistics():
+    """The population fit must recover the Table-1 per-neuron log-moments
+    (large-sample check on the sampler itself)."""
+    rng = np.random.default_rng(0)
+    spn = []
+    for _ in range(40):
+        s = sample_workload(rng, scale=0.1)
+        spn.append(s.n_synapses / s.n_neurons)
+    mu = float(np.mean(np.log(spn)))
+    # clamping and the connectivity cap bias the tail slightly; the
+    # log-mean must still sit near the Table-1 fit
+    assert abs(mu - TABLE1_FIT.syn_per_neuron[0]) < 1.0
