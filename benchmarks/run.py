@@ -8,6 +8,7 @@ roofline table from dry-run artifacts.  Prints CSV blocks.
   PYTHONPATH=src python -m benchmarks.run compile      # + BENCH_compile.json
   PYTHONPATH=src python -m benchmarks.run energy       # + BENCH_energy.json
   PYTHONPATH=src python -m benchmarks.run stress       # + BENCH_stress.json (full 32x32)
+  PYTHONPATH=src python -m benchmarks.run faults       # + BENCH_faults.json (failure storm)
 
 The design-space sweep benchmark (batched Max-Plus vs per-graph loop)
 lives in its own module:  PYTHONPATH=src python -m benchmarks.sweep
@@ -79,6 +80,16 @@ def main() -> None:
         t0 = time.perf_counter()
         rows, summary, _ = stress.run(smoke=want is None)
         print(f"\n# stress  ({time.perf_counter() - t0:.1f}s)")
+        for row in rows:
+            print(",".join(str(x) for x in row))
+        print("##", summary)
+
+    if want is None or "faults" in want:
+        from . import faults
+
+        t0 = time.perf_counter()
+        rows, summary, _ = faults.run(smoke=want is None)
+        print(f"\n# faults  ({time.perf_counter() - t0:.1f}s)")
         for row in rows:
             print(",".join(str(x) for x in row))
         print("##", summary)

@@ -52,6 +52,7 @@ from .hardware import (
     DYNAP_SE_9,
     DYNAP_SE_16,
     DYNAP_SE_1024,
+    ChipState,
     CrossbarConfig,
     HardwareConfig,
     TileConfig,
@@ -120,7 +121,9 @@ from .sdfg import (
 from .snn import SNN, calibrate_spikes, feedforward
 from .workloads import (
     TABLE1_FIT,
+    FaultEvent,
     WorkloadSpec,
+    failure_storm,
     sample_workload,
     workload_suite,
 )

@@ -41,7 +41,7 @@ from typing import Optional, Sequence, Union
 
 import numpy as np
 
-from .hardware import HardwareConfig
+from .hardware import ChipState, HardwareConfig
 from .maxplus import (
     NEG_INF,
     EdgeStack,
@@ -354,6 +354,8 @@ def stack_hardware_aware(
     *,
     relax_shortcuts: bool = False,
     with_metrics: bool = False,
+    chip_state: Optional[ChipState] = None,
+    rate_scale=None,
 ) -> Union[EdgeStack, tuple[EdgeStack, ChipMetrics]]:
     """Hardware-aware graphs of B candidate bindings as ONE EdgeStack.
 
@@ -385,6 +387,18 @@ def stack_hardware_aware(
     accumulators (cut traffic, spike-hops, occupied tiles) fall out of
     the same vectorized hop pass that produced the NoC delays, so the
     energy objective costs no extra traversal.
+
+    ``chip_state`` (a :class:`~repro.core.hardware.ChipState`) applies the
+    chip's current degradation inside the SAME hop pass: throttled-route
+    scale factors are gathered per (candidate, flow-edge) pair and
+    multiply the NoC link time.  Dead tiles do NOT change the stack — they
+    make whole candidate rows infeasible, which :func:`batch_execute`
+    masks to ``inf`` periods.  ``rate_scale`` (scalar, or (n_flow_edges,)
+    per-flow-edge factors — the per-app drift multipliers of a union
+    graph) scales the observed spike rates used for both NoC delays and
+    the chip-metric accumulators; the design-time buffer provisioning
+    (back-edge tokens) and crossbar firing times ``tau`` stay at their
+    design values.
     """
     bindings = _as_binding_matrix(bindings, app.n_actors)
     n_b = bindings.shape[0]
@@ -415,12 +429,23 @@ def stack_hardware_aware(
 
     # per-row NoC hops in one vectorized gather: delays — and, when asked,
     # the chip-objective accumulators — derive from this single pass
-    if ef:
-        hops = hw.hops_array(
-            np.take(bindings, flow.src, axis=-1),
-            np.take(bindings, flow.dst, axis=-1),
+    flow_rate = flow.rate
+    if rate_scale is not None:
+        scale = np.asarray(rate_scale, dtype=np.float64)
+        assert scale.ndim == 0 or scale.shape == (ef,), (
+            f"rate_scale must be scalar or ({ef},), got {scale.shape}"
         )
-        delays = hw.comm_delay_from_hops(flow.rate, hops)
+        flow_rate = flow_rate * scale
+    if ef:
+        src_t = np.take(bindings, flow.src, axis=-1)
+        dst_t = np.take(bindings, flow.dst, axis=-1)
+        hops = hw.hops_array(src_t, dst_t)
+        link_scale = (
+            chip_state.route_scale_array(src_t, dst_t)
+            if chip_state is not None
+            else None
+        )
+        delays = hw.comm_delay_from_hops(flow_rate, hops, link_scale)
     else:
         hops = np.zeros((n_b, 0), dtype=np.int64)
         delays = np.zeros((n_b, 0))
@@ -434,11 +459,11 @@ def stack_hardware_aware(
             app.read_cost[flow.dst] if app.read_cost is not None else 1.0
         )
         metrics = ChipMetrics(
-            cut_traffic=(flow.rate * (hops > 0)).sum(axis=1),
-            spike_hops=(flow.rate * hops).sum(axis=1),
+            cut_traffic=(flow_rate * (hops > 0)).sum(axis=1),
+            spike_hops=(flow_rate * hops).sum(axis=1),
             tiles_used=(occ > 0).sum(axis=1),
-            total_spikes=float(flow.rate.sum()),
-            read_charge=float((flow.rate * read_w).sum()),
+            total_spikes=float(np.asarray(flow_rate).sum()),
+            read_charge=float((flow_rate * read_w).sum()),
         )
     base_w = (tau[base_dst] + np.concatenate(
         [keep_self.delay, np.zeros(ef), back.delay]
@@ -720,6 +745,8 @@ def batch_execute(
     with_energy: bool = False,
     power_iters: int = 64,
     pad_shapes: Optional[bool] = None,
+    chip_state: Optional[ChipState] = None,
+    rate_scale=None,
 ) -> EngineReport:
     """Self-timed steady state of every candidate, in one batched pass.
 
@@ -751,6 +778,13 @@ def batch_execute(
     (``energies``, pJ per iteration) and the raw :class:`ChipMetrics`:
     the accumulators ride the stack build's own hop pass, so the energy
     objective adds no second traversal and no per-candidate Python.
+
+    ``chip_state``/``rate_scale`` apply run-time degradation (see
+    :func:`stack_hardware_aware`): throttled routes and drifted spike
+    rates rescale the stacked delays, and any candidate row binding a
+    dead tile reports an ``inf`` period (hence zero throughput and ``inf``
+    energy) — degraded candidates rank in the same batched pass as
+    healthy ones.
     """
     bindings = _as_binding_matrix(bindings, app.n_actors)
     t0 = time.perf_counter()
@@ -758,7 +792,8 @@ def batch_execute(
     # dependencies, so the starts path must build the plain stack
     built = stack_hardware_aware(
         app, bindings, hw, orders_list, relax_shortcuts=not with_starts,
-        with_metrics=with_energy,
+        with_metrics=with_energy, chip_state=chip_state,
+        rate_scale=rate_scale,
     )
     stack, metrics = built if with_energy else (built, None)
     t_build = time.perf_counter() - t0
@@ -778,6 +813,8 @@ def batch_execute(
         sink.record(key)
     periods = mcr_batch(stack, backend=backend, rel_tol=rel_tol, lo0=lo0)
     periods = periods[:n_rows]
+    if chip_state is not None and chip_state.dead.any():
+        periods = np.where(chip_state.dead_rows(bindings), np.inf, periods)
     starts = None
     if with_starts:
         t_mat = maxplus_matrix_batch(stack)
@@ -863,6 +900,8 @@ def union_component_periods(
     backend: str = "auto",
     rel_tol: float = 1e-8,
     with_metrics: bool = False,
+    chip_state: Optional[ChipState] = None,
+    rate_scale=None,
 ):
     """Per-component steady-state periods of ONE bound configuration.
 
@@ -881,6 +920,10 @@ def union_component_periods(
     With ``with_metrics=True`` returns ``(labels, periods, metrics)`` where
     ``metrics`` is the :class:`ChipMetrics` of the same (single-row) build,
     so callers caching per-component records pay for one stack build only.
+
+    ``chip_state``/``rate_scale`` score the configuration under run-time
+    degradation (see :func:`stack_hardware_aware`); a component whose
+    actors bind any dead tile reports an ``inf`` period.
     """
     binding = _as_binding_matrix(binding, app.n_actors)
     assert binding.shape[0] == 1, "one configuration at a time"
@@ -888,11 +931,12 @@ def union_component_periods(
     if with_metrics:
         stack, metrics = stack_hardware_aware(
             app, binding, hw, orders_list, relax_shortcuts=True,
-            with_metrics=True,
+            with_metrics=True, chip_state=chip_state, rate_scale=rate_scale,
         )
     else:
         stack = stack_hardware_aware(
-            app, binding, hw, orders_list, relax_shortcuts=True
+            app, binding, hw, orders_list, relax_shortcuts=True,
+            chip_state=chip_state, rate_scale=rate_scale,
         )
     src, dst = stack.src[0], stack.dst[0]
     tokens, w = stack.tokens[0], stack.weights[0]
@@ -912,6 +956,11 @@ def union_component_periods(
         weights=np.where(mask, w[None, :], NEG_INF),
     )
     periods = mcr_batch(comp_stack, backend=backend, rel_tol=rel_tol)
+    if chip_state is not None and chip_state.dead.any():
+        dead_actors = chip_state.dead[binding[0]]
+        if dead_actors.any():
+            periods = periods.copy()
+            periods[np.unique(labels[dead_actors])] = np.inf
     if with_metrics:
         return labels, periods, metrics
     return labels, periods

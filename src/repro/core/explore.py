@@ -416,6 +416,8 @@ def score_free_tile_subsets(
     binder_kwargs: Optional[dict] = None,
     max_candidates: int = 64,
     backend: str = "auto",
+    chip_state=None,
+    rate_scale=None,
 ) -> SubsetScores:
     """Score every candidate k-subset of the free tiles in ONE batched call.
 
@@ -423,6 +425,11 @@ def score_free_tile_subsets(
     only on ``k``, so they are computed once; candidates differ in which
     physical tiles the virtual tiles land on — i.e. purely in NoC delays —
     which is exactly a stack of edge-weight arrays over a shared topology.
+
+    ``chip_state``/``rate_scale`` score the candidates under run-time
+    degradation (throttled routes, drifted spike rates; see
+    :func:`~repro.core.engine.batch_execute`) — callers must already have
+    excluded dead tiles from ``free``.
     """
     subsets = candidate_subsets(free, k, max_candidates=max_candidates)
     sub_hw = dataclasses.replace(hw, n_tiles=k)
@@ -443,7 +450,8 @@ def score_free_tile_subsets(
     phys_bindings = np.asarray(subsets, dtype=np.int64)[:, bres.binding]
     orders = project_order_batch(list(single_order), phys_bindings)
     rep = batch_execute(
-        app_g, phys_bindings, hw, orders, backend=backend, with_energy=True
+        app_g, phys_bindings, hw, orders, backend=backend, with_energy=True,
+        chip_state=chip_state, rate_scale=rate_scale,
     )
     return SubsetScores(
         subsets=subsets,

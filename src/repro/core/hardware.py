@@ -142,7 +142,7 @@ class HardwareConfig:
         )
 
     def comm_delay_from_hops(
-        self, n_spikes: np.ndarray, hops: np.ndarray
+        self, n_spikes: np.ndarray, hops: np.ndarray, link_scale=None
     ) -> np.ndarray:
         """Vectorized :meth:`comm_delay` from precomputed hop counts.
 
@@ -150,11 +150,20 @@ class HardwareConfig:
         >= 1 hop apart on the mesh) and yields zero delay.  Shared by
         :meth:`comm_delay_array` and the batched engine, which derives
         delay AND energy from one hop computation.
+
+        ``link_scale`` (broadcastable against ``hops``) multiplies the mesh
+        link time — the per-route throttle factor from
+        :meth:`ChipState.route_scale`.  Wormhole serialization is gated by
+        the slowest link on the route, so one factor scales both the
+        per-packet serialization term and the pipeline-fill term.
         """
+        t_link = self.t_spike_link
+        if link_scale is not None:
+            t_link = t_link * np.asarray(link_scale, dtype=np.float64)
         delay = (
             self.t_route
-            + np.asarray(n_spikes) * (self.t_spike_encode + self.t_spike_link)
-            + (hops - 1) * self.t_spike_link
+            + np.asarray(n_spikes) * (self.t_spike_encode + t_link)
+            + (hops - 1) * t_link
         )
         return np.where(hops == 0, 0.0, delay)
 
@@ -238,6 +247,190 @@ class HardwareConfig:
             dyn + self.p_tile_idle * np.asarray(tiles_used) * np.where(ok, periods, 0.0),
             np.inf,
         )
+
+
+class ChipState:
+    """Mutable degradation state of one physical chip.
+
+    :class:`HardwareConfig` is frozen and hashable — it is the *design-time*
+    model and doubles as a compile-cache key, so run-time degradation lives
+    here instead: dead tiles, per-link NoC throttle factors, and per-app
+    spike-rate drift multipliers.  The engine consumes this state inside its
+    one-pass hop traversal (``stack_hardware_aware``), so degraded candidate
+    bindings score exactly in the same batched ``EdgeStack`` path as healthy
+    ones — no second modeling path.
+
+    Every mutation bumps :attr:`epoch`; callers that cache period analyses
+    (the runtime's component-record cache) key on the epoch so stale results
+    can never be combined with fresh ones.
+
+    Link throttles use the mesh's XY (dimension-order) routing: a route
+    first travels along the row to the destination column, then along the
+    column.  Wormhole serialization is gated by the slowest link on the
+    route, so a route's scale factor is the *max* throttle over the links it
+    crosses, precomputed as an (n_tiles, n_tiles) matrix and gathered per
+    (candidate, edge) pair in the batched path.
+    """
+
+    def __init__(self, hw: HardwareConfig):
+        self.hw = hw
+        self.dead = np.zeros(hw.n_tiles, dtype=bool)
+        self.link_throttle: dict[tuple[int, int], float] = {}
+        self.drift: dict[str, float] = {}
+        self.epoch = 0
+        self._scale_cache: np.ndarray | None = None
+        self._sig_cache: dict[tuple, tuple[int, tuple]] = {}
+
+    # --- introspection ---------------------------------------------------
+    @property
+    def pristine(self) -> bool:
+        """True when no degradation is active (fast-path: skip all scaling)."""
+        return not (self.dead.any() or self.link_throttle or self.drift)
+
+    def alive_tiles(self) -> np.ndarray:
+        return np.flatnonzero(~self.dead)
+
+    @property
+    def n_alive(self) -> int:
+        return int((~self.dead).sum())
+
+    def dead_rows(self, bindings: np.ndarray) -> np.ndarray:
+        """(B,) mask of candidate bindings that touch any dead tile."""
+        bindings = np.asarray(bindings, dtype=np.int64)
+        return self.dead[bindings].any(axis=-1)
+
+    # --- mutations (each bumps the epoch) --------------------------------
+    def _bump(self, *, links: bool = False) -> None:
+        self.epoch += 1
+        if links:
+            self._scale_cache = None
+
+    def fail_tiles(self, tiles) -> None:
+        tiles = np.asarray(tiles, dtype=np.int64).reshape(-1)
+        if tiles.size and (tiles.min() < 0 or tiles.max() >= self.hw.n_tiles):
+            raise ValueError(f"tile ids out of range for n_tiles={self.hw.n_tiles}")
+        self.dead[tiles] = True
+        self._bump()
+
+    def heal_tiles(self, tiles) -> None:
+        tiles = np.asarray(tiles, dtype=np.int64).reshape(-1)
+        self.dead[tiles] = False
+        self._bump()
+
+    def throttle_link(self, a: int, b: int, factor: float) -> None:
+        """Slow the mesh link between adjacent tiles ``a`` and ``b``.
+
+        ``factor`` multiplies the link's serialization time (>= 1; 1 heals).
+        """
+        if self.hw.hops(int(a), int(b)) != 1:
+            raise ValueError(f"tiles {a} and {b} are not mesh-adjacent")
+        if not factor >= 1.0:
+            raise ValueError("throttle factor must be >= 1.0")
+        key = (min(int(a), int(b)), max(int(a), int(b)))
+        if factor == 1.0:
+            self.link_throttle.pop(key, None)
+        else:
+            self.link_throttle[key] = float(factor)
+        self._bump(links=True)
+
+    def heal_link(self, a: int, b: int) -> None:
+        key = (min(int(a), int(b)), max(int(a), int(b)))
+        self.link_throttle.pop(key, None)
+        self._bump(links=True)
+
+    def set_drift(self, app: str, factor: float) -> None:
+        """Observed spike rates of ``app`` run at ``factor`` x the design profile."""
+        if not factor > 0.0:
+            raise ValueError("drift factor must be positive")
+        if factor == 1.0:
+            self.drift.pop(app, None)
+        else:
+            self.drift[app] = float(factor)
+        self._bump()
+
+    def clear_drift(self, app: str) -> None:
+        self.drift.pop(app, None)
+        self._bump()
+
+    def component_signature(self, tiles, apps) -> tuple:
+        """Hashable view of the degradation VISIBLE to one placement
+        component: its dead tiles, the route-scale submatrix over its
+        tile pairs (None when clean), and its member apps' drift factors.
+        Everything chip-dependent in a component's steady-state score is
+        a function of this tuple plus the bindings, so record caches
+        keyed on it survive mutations that do not touch the component —
+        a fault invalidates the components it hits, not the whole chip.
+
+        Memoized per chip epoch: the route-scale submatrix extraction is
+        the expensive part, and between mutations every caller asks for
+        the same footprints again (cache combines re-derive the signature
+        on every lookup).
+        """
+        key = (tuple(int(t) for t in tiles), tuple(apps))
+        hit = self._sig_cache.get(key)
+        if hit is not None and hit[0] == self.epoch:
+            return hit[1]
+        tiles = np.asarray(key[0], dtype=np.int64)
+        dead_part = tuple(int(t) for t in tiles[self.dead[tiles]])
+        link_part = None
+        if self.link_throttle:
+            sub = self.route_scale()[np.ix_(tiles, tiles)]
+            if (sub != 1.0).any():
+                link_part = sub.tobytes()
+        drift_part = tuple(self.drift.get(a, 1.0) for a in apps)
+        sig = (dead_part, link_part, drift_part)
+        if len(self._sig_cache) > 4096:
+            self._sig_cache.clear()
+        self._sig_cache[key] = (self.epoch, sig)
+        return sig
+
+    # --- route throttle matrix -------------------------------------------
+    def route_scale(self) -> np.ndarray | None:
+        """(n_tiles, n_tiles) per-route link-time multiplier, or None if clean.
+
+        Entry [s, d] is the max throttle factor over the links the XY route
+        s -> d crosses (1.0 where the route is clean).  A horizontal link
+        (x, y)-(x+1, y) is crossed iff the route's source row is ``y`` and
+        ``min(sx, dx) <= x < max(sx, dx)``; a vertical link (x, y)-(x, y+1)
+        iff the destination column is ``x`` and ``min(sy, dy) <= y <
+        max(sy, dy)``.  Rebuilt lazily after link mutations.
+        """
+        if not self.link_throttle:
+            return None
+        if self._scale_cache is None:
+            d, _ = self.hw.mesh_shape
+            t = np.arange(self.hw.n_tiles, dtype=np.int64)
+            x, y = t % d, t // d
+            sx, sy = x[:, None], y[:, None]   # source coords (rows)
+            dx, dy = x[None, :], y[None, :]   # destination coords (cols)
+            scale = np.ones((self.hw.n_tiles, self.hw.n_tiles), dtype=np.float64)
+            for (a, b), f in sorted(self.link_throttle.items()):
+                ax, ay = a % d, a // d
+                bx, by = b % d, b // d
+                if ay == by:  # horizontal link (lx, ly)-(lx+1, ly)
+                    lx, ly = min(ax, bx), ay
+                    crossed = (
+                        (sy == ly)
+                        & (np.minimum(sx, dx) <= lx)
+                        & (lx < np.maximum(sx, dx))
+                    )
+                else:  # vertical link (lx, ly)-(lx, ly+1)
+                    lx, ly = ax, min(ay, by)
+                    crossed = (
+                        (dx == lx)
+                        & (np.minimum(sy, dy) <= ly)
+                        & (ly < np.maximum(sy, dy))
+                    )
+                scale = np.where(crossed, np.maximum(scale, f), scale)
+            self._scale_cache = scale
+        return self._scale_cache
+
+    def route_scale_array(self, src_tiles, dst_tiles) -> np.ndarray | None:
+        """Gather per-pair route scales; None when no link is throttled."""
+        scale = self.route_scale()
+        if scale is None:
+            return None
+        return scale[np.asarray(src_tiles, np.int64), np.asarray(dst_tiles, np.int64)]
 
 
 # The three hardware models evaluated in the paper (§6.1, Fig. 16).

@@ -390,8 +390,11 @@ def _upper_path_bound(
 def _positive_cycle_masks(
     stack: EdgeStack,
     lam: np.ndarray,
-    flat_src: np.ndarray,
-    order: np.ndarray,
+    src_ord: np.ndarray,
+    w_ord: np.ndarray,
+    t_ord: np.ndarray,
+    row_ord: np.ndarray,
+    key_row: np.ndarray,
     uniq_keys: np.ndarray,
     seg_starts: np.ndarray,
     upper: np.ndarray,
@@ -409,23 +412,34 @@ def _positive_cycle_masks(
     true cycle ratio, where relaxation may never settle, and their answer
     is discarded by the caller anyway — without this, one slow row would
     drag every later bisection step to the full n+1 rounds.
+
+    The relaxation runs in destination-key space: only actors with an
+    incoming edge (``uniq_keys``) can ever move off the zero start
+    distance, and a zero distance can never exceed ``upper + 1``
+    (``upper >= 0``), so tracking the ``(n_keys,)`` vector is exact while
+    skipping every full ``(b*n,)`` copy/compare of the dense form.  Edge
+    arrays arrive pre-permuted into segment order (``*_ord``), removing
+    the per-round gather through ``order``.
     """
     b, n = stack.n_graphs, stack.n_actors
-    ww = (stack.weights - lam[:, None] * stack.tokens).ravel()
+    ww = w_ord - lam[row_ord] * t_ord
     dist = np.zeros(b * n)
+    dist_k = np.zeros(len(uniq_keys))
+    over_key = upper[key_row] + 1.0
     positive = np.zeros(b, dtype=bool)
     resolved = np.zeros(b, dtype=bool) if active is None else ~active
     for _ in range(n + 1):
-        cand = dist[flat_src] + ww
-        seg_max = np.maximum.reduceat(cand[order], seg_starts)
-        new = dist.copy()
-        new[uniq_keys] = np.maximum(dist[uniq_keys], seg_max)
-        row_changed = ((new - dist) > atol).reshape(b, n).any(axis=1)
+        seg_max = np.maximum.reduceat(dist[src_ord] + ww, seg_starts)
+        improved = (seg_max - dist_k) > atol
+        row_changed = np.bincount(key_row, weights=improved, minlength=b) > 0
         resolved |= ~row_changed
-        over = (new.reshape(b, n) > upper[:, None] + 1.0).any(axis=1) & ~resolved
+        np.maximum(dist_k, seg_max, out=dist_k)
+        over = (
+            np.bincount(key_row, weights=dist_k > over_key, minlength=b) > 0
+        ) & ~resolved
         positive |= over
         resolved |= over
-        dist = new
+        dist[uniq_keys] = dist_k
         if resolved.all():
             break
     # rows still improving after n+1 rounds must contain a positive cycle
@@ -479,6 +493,12 @@ def mcr_batch(
     flat_dst = (rows * n + stack.dst).ravel()
     order = np.argsort(flat_dst, kind="stable")
     uniq_keys, seg_starts = np.unique(flat_dst[order], return_index=True)
+    # segment-ordered edge views + key->row map, hoisted out of the probes
+    src_ord = flat_src[order]
+    w_ord = stack.weights.ravel()[order]
+    t_ord = stack.tokens.ravel()[order]
+    row_ord = order // e
+    key_row = uniq_keys // n
 
     upper = _upper_path_bound(stack, order, uniq_keys, seg_starts)
     lo, hi, has_cycle = _bisection_bounds(stack, upper, lo0)
@@ -490,7 +510,8 @@ def mcr_batch(
             break
         mid = np.where(active, 0.5 * (lo + hi), lo)
         pos = _positive_cycle_masks(
-            stack, mid, flat_src, order, uniq_keys, seg_starts, upper, active
+            stack, mid, src_ord, w_ord, t_ord, row_ord, key_row,
+            uniq_keys, seg_starts, upper, active,
         )
         has_cycle |= active & pos
         lo = np.where(active & pos, mid, lo)

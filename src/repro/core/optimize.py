@@ -68,7 +68,7 @@ from .binding import (
     lpt_assign,
 )
 from .engine import batch_execute, project_order_batch
-from .hardware import HardwareConfig
+from .hardware import ChipState, HardwareConfig
 from .partition import ClusteredSNN
 from .runtime import single_tile_order
 from .sdfg import SDFG, sdfg_from_clusters
@@ -369,6 +369,8 @@ def optimize_binding_graph(
     score_rel_tol: float = 1e-4,
     final_rel_tol: float = 1e-8,
     backend: str = "auto",
+    chip_state: Optional[ChipState] = None,
+    rate_scale=None,
 ) -> OptimizeReport:
     """Graph-level search core: optimize actor-to-tile bindings of ``app``.
 
@@ -405,6 +407,13 @@ def optimize_binding_graph(
     energy.  The reported ``period``/``seed_periods`` stay the exact
     unclamped sub-union periods.  The default ``-inf`` floor is a no-op
     (bit-for-bit the unclamped ranking).
+
+    ``chip_state``/``rate_scale`` score every candidate under the chip's
+    run-time degradation (throttled routes, drifted spike rates — see
+    :func:`~repro.core.engine.stack_hardware_aware`); candidates binding a
+    dead tile score ``inf`` and lose naturally, but callers searching a
+    degraded chip should pass alive-only ``allowed_tiles`` (and repaired
+    seeds) so the search budget is not wasted on infeasible rows.
     """
     _validate_budget(population, generations, objective)
     elite = min(max(1, elite), population)
@@ -446,7 +455,7 @@ def optimize_binding_graph(
         orders = project_order_batch(single_order, pop)
         rep = batch_execute(
             app, pop, hw, orders, backend=backend, rel_tol=rel_tol,
-            with_energy=True,
+            with_energy=True, chip_state=chip_state, rate_scale=rate_scale,
         )
         # dead/acyclic rows (cannot happen for live apps, but stay safe)
         alive = np.isfinite(rep.periods) & (rep.periods > 0)
@@ -626,6 +635,8 @@ def optimize_binding(
     score_rel_tol: float = 1e-4,
     final_rel_tol: float = 1e-8,
     backend: str = "auto",
+    chip_state: Optional[ChipState] = None,
+    rate_scale=None,
 ) -> OptimizeReport:
     """Search cluster-to-tile bindings with the exact batched chip
     objective in the loop (the §4.2 decision driven by the §4.4 analysis
@@ -708,6 +719,8 @@ def optimize_binding(
         score_rel_tol=score_rel_tol,
         final_rel_tol=final_rel_tol,
         backend=backend,
+        chip_state=chip_state,
+        rate_scale=rate_scale,
     )
     rep.opt_time_s = time.perf_counter() - t0   # include seed-binder time
     return rep

@@ -74,7 +74,7 @@ from .engine import (
     record_cache_stats,
     union_component_periods,
 )
-from .hardware import HardwareConfig
+from .hardware import ChipState, HardwareConfig
 from .partition import ClusteredSNN, partition_greedy
 from .schedule import (
     SelfTimedExecutor,
@@ -223,14 +223,25 @@ class AdmissionError(RuntimeError):
 
 @dataclasses.dataclass
 class HardwareState:
-    """Tracks which tiles are currently allocated to running applications."""
+    """Tracks which tiles are currently allocated to running applications.
+
+    ``chip`` optionally points at the chip's mutable degradation state
+    (:class:`~repro.core.hardware.ChipState`): when set, dead tiles are
+    never reported free, so every admission and re-placement path that
+    draws from :meth:`free_tiles` is dead-tile-safe without further
+    checks.
+    """
 
     hw: HardwareConfig
     allocated: dict[str, list[int]] = dataclasses.field(default_factory=dict)
+    chip: Optional[ChipState] = None
 
     def free_tiles(self) -> list[int]:
-        """Sorted physical tile ids not allocated to any running app."""
+        """Sorted physical tile ids not allocated to any running app
+        (excluding dead tiles when a :class:`ChipState` is attached)."""
         mask = np.ones(self.hw.n_tiles, dtype=bool)
+        if self.chip is not None:
+            mask &= ~self.chip.dead
         for tiles in self.allocated.values():
             if tiles:
                 mask[np.asarray(tiles, dtype=np.int64)] = False
@@ -250,6 +261,8 @@ def runtime_admit(
     weights: LoadWeights = LoadWeights(),
     tile_selection: str = "batched",
     optimize_budget: Optional[tuple[int, int]] = None,
+    chip_state: Optional[ChipState] = None,
+    rate_scale: float = 1.0,
 ) -> CompileReport:
     """Admit an application onto the currently-free tiles (Fig. 11).
 
@@ -275,6 +288,13 @@ def runtime_admit(
     optimizer's seeds, so the refined admission is never worse; cost grows
     roughly linearly with ``generations x population``.  ``None`` (the
     default) keeps the plain heuristic path.
+
+    ``chip_state``/``rate_scale`` admit onto a DEGRADED chip: candidate
+    subsets and the final report score under the chip's throttled routes
+    and this app's drift multiplier (``state.free_tiles()`` already
+    excludes dead tiles when ``state.chip`` is attached).  On a pristine
+    chip with unit drift the path — and the report — is bit-identical to
+    the undegraded one.
     """
     free = state.free_tiles()
     if not free:
@@ -301,6 +321,7 @@ def runtime_admit(
             scores = score_free_tile_subsets(
                 clustered, state.hw, free, n_tiles_request, single_order,
                 binder_kwargs={"weights": weights},
+                chip_state=chip_state, rate_scale=rate_scale,
             )
             free = list(scores.best)
         elif tile_selection == "first":
@@ -331,6 +352,7 @@ def runtime_admit(
             generations=gens, population=pop,
             weights=weights, allowed_tiles=free,
             extra_seeds=[phys_seed],
+            chip_state=chip_state, rate_scale=rate_scale,
         ).binding
         to_virt = {p: v for v, p in enumerate(free)}
         virt_binding = np.array(
@@ -353,7 +375,16 @@ def runtime_admit(
     t_sched = time.perf_counter() - t1
 
     app = sdfg_from_clusters(clustered, hw=state.hw)
-    thr = analyze_throughput(app, phys_binding, state.hw, phys_orders)
+    if chip_state is not None and (not chip_state.pristine or rate_scale != 1.0):
+        # degraded chip: the howard-solver path is chip-state-unaware, so
+        # score the admitted configuration through the batched engine
+        rep = batch_execute(
+            app, phys_binding, state.hw, [phys_orders],
+            chip_state=chip_state, rate_scale=rate_scale,
+        )
+        thr = float(rep.throughputs[0])
+    else:
+        thr = analyze_throughput(app, phys_binding, state.hw, phys_orders)
     state.allocated[clustered.snn.name] = list(free)
     return CompileReport(
         app=clustered.snn.name,
@@ -405,9 +436,20 @@ class AdmissionEvent:
     its TRUE steady-state rate — 1 / max period over the graph components
     its actors touch — which is >= the conservative chip rate for any app
     off the chip's critical cycle.
+
+    The fault/drift layer adds four kinds: ``"fault"``/``"drift"``/
+    ``"heal"`` record a chip mutation (their ``chip_throughput`` shows the
+    chip DEGRADED, before recovery), ``"remap"`` records the incremental
+    recovery — its ``seed_throughput`` is the chip throughput of the
+    minimally-repaired seed placement (dead-bound clusters migrated to
+    the nearest alive candidate tile) that the region re-optimization
+    started from, so ``chip_throughput >= seed_throughput`` is the
+    per-event never-regress invariant.  A resident whose component has no
+    alive candidate tile left is released with an explicit
+    ``"displaced"`` event (never silently dropped).
     """
 
-    kind: str                 # admit | reject | finish | evict | rebalance
+    kind: str   # admit | reject | finish | evict | rebalance | fault | drift | heal | remap | displaced
     app: str
     tiles: list[int]
     wall_s: float             # wall-clock cost of the operation
@@ -418,6 +460,8 @@ class AdmissionEvent:
     scope: str = ""                # rebalance events: "full" | "region"
     region_apps: int = 0           # apps re-optimized by a region rebalance
     app_throughputs: dict = dataclasses.field(default_factory=dict)
+    seed_throughput: float = 0.0   # remap events: repaired-seed chip rate
+    factor: float = 0.0            # drift/throttle events: applied multiplier
 
 
 def _same_application(app: Union[SNN, ClusteredSNN], art: DesignArtifact) -> bool:
@@ -503,7 +547,10 @@ class AdmissionController:
                 f"have ('period', 'energy', 'pareto')"
             )
         self.hw = hw
-        self.state = HardwareState(hw)
+        # mutable chip degradation state (dead tiles, link throttles,
+        # per-app drift); every score the controller takes goes through it
+        self.chip = ChipState(hw)
+        self.state = HardwareState(hw, chip=self.chip)
         self.weights = weights
         self.tile_selection = tile_selection
         self.sim_iterations = sim_iterations
@@ -537,6 +584,13 @@ class AdmissionController:
         self._epoch_counter = 0
         self._comp_cache: dict[tuple, dict] = {}
         self._rebalance_count = 0
+        # last stamped per-app rates: the staleness detector compares a
+        # fresh re-score under the CURRENT chip state against this
+        self._app_rate_snapshot: dict[str, float] = {}
+        # tiles whose neighborhood skipped opportunistic re-optimization
+        # during a latency-critical fault remap; consumed (as extra
+        # region seeds) by the next growing rebalance or heal remap
+        self._pending_consolidation: set[int] = set()
         self.cache_stats = CompileCacheStats()
         self.artifacts: dict[tuple[str, HardwareConfig], DesignArtifact] = {}
         self.reports: dict[str, CompileReport] = {}
@@ -628,6 +682,8 @@ class AdmissionController:
                     weights=self.weights,
                     tile_selection=self.tile_selection,
                     optimize_budget=self.optimize_budget,
+                    chip_state=self.chip,
+                    rate_scale=self.chip.drift.get(art.app, 1.0),
                 )
         except AdmissionError:
             self.events.append(AdmissionEvent(
@@ -681,6 +737,294 @@ class AdmissionController:
             self._rebalance(freed_tiles=tiles)
         return tiles
 
+    # -- fault & drift runtime ------------------------------------------
+    def stale_apps(self) -> list[str]:
+        """Residents whose last-stamped rate no longer holds on this chip.
+
+        Re-scores every resident component under the CURRENT chip state
+        (the component cache keys on the chip's degradation epoch, so any
+        mutation forces fresh engine calls) and returns the apps whose
+        true steady-state rate moved relative to the snapshot stamped at
+        the last trajectory event.  Empty when the chip is pristine, when
+        the degradation touches no resident, or when the controller does
+        not track chip metrics (no snapshot to compare against).
+        """
+        if not self.state.allocated:
+            return []
+        m = self.chip_metrics()
+        if m is None:
+            return []
+        return sorted(
+            n for n, thr in m["app_throughputs"].items()
+            if not np.isclose(
+                thr,
+                self._app_rate_snapshot.get(n, thr),
+                rtol=1e-6, atol=0.0,
+            )
+        )
+
+    def _refresh_rate_snapshot(self) -> None:
+        m = self.chip_metrics()
+        self._app_rate_snapshot = (
+            dict(m["app_throughputs"]) if m is not None else {}
+        )
+
+    def inject_fault(
+        self,
+        tiles: Optional[list[int]] = None,
+        *,
+        links: Optional[list[tuple[int, int]]] = None,
+        throttle: float = 4.0,
+        remap: bool = True,
+    ) -> list[str]:
+        """Fail tiles and/or throttle links, then recover incrementally.
+
+        Marks ``tiles`` dead (their rows become infeasible for every
+        binding) and multiplies the per-hop link time of each adjacent
+        ``links`` pair by ``throttle`` (a wormhole route crossing several
+        throttled links is gated by the slowest), re-scores the resident
+        set under the degraded chip, records a ``"fault"`` trajectory
+        event whose chip metrics show the chip DEGRADED (before
+        recovery), and — unless ``remap=False`` — runs :meth:`remap`.
+        Returns the names of apps displaced during recovery (empty when
+        every resident survived, always empty with ``remap=False``).
+        """
+        if not tiles and not links:
+            raise ValueError("inject_fault needs tiles and/or links")
+        t0 = time.perf_counter()
+        if tiles:
+            self.chip.fail_tiles(tiles)
+        for a, b in links or []:
+            self.chip.throttle_link(a, b, throttle)
+        stale = self.stale_apps()
+        event = AdmissionEvent(
+            kind="fault", app="*",
+            tiles=sorted(int(t) for t in tiles or []),
+            wall_s=time.perf_counter() - t0,
+            factor=float(throttle) if links else 0.0,
+        )
+        self._stamp_chip_metrics(event)
+        self._refresh_rate_snapshot()
+        self.events.append(event)
+        if not remap:
+            return []
+        return self.remap(
+            failed_tiles=sorted(int(t) for t in tiles or []),
+            stale=stale,
+        )
+
+    def inject_drift(
+        self, app: str, factor: float, *, remap: bool = True
+    ) -> list[str]:
+        """Scale ``app``'s observed spike rates by ``factor`` (workload
+        drift: the network fires more or less than its design-time
+        profile said).  NoC delays and dynamic-energy accumulators see
+        the drifted rates; buffer back-edges and the intra-tile
+        time-constant stay design-time.  Records a ``"drift"`` event and
+        — unless ``remap=False`` — re-places the affected region.
+        Returns any displaced app names (normally empty: drift never
+        makes a placement infeasible).
+        """
+        t0 = time.perf_counter()
+        self.chip.set_drift(app, factor)
+        stale = self.stale_apps()
+        event = AdmissionEvent(
+            kind="drift", app=app, tiles=[],
+            wall_s=time.perf_counter() - t0,
+            factor=float(factor),
+        )
+        self._stamp_chip_metrics(event)
+        self._refresh_rate_snapshot()
+        self.events.append(event)
+        if not remap:
+            return []
+        return self.remap(stale=stale)
+
+    def heal(
+        self,
+        tiles: Optional[list[int]] = None,
+        *,
+        links: Optional[list[tuple[int, int]]] = None,
+        drift_apps: Optional[list[str]] = None,
+        remap: bool = True,
+    ) -> list[str]:
+        """Undo degradation: revive tiles, restore links, clear drift.
+
+        Records a ``"heal"`` event, then — unless ``remap=False`` —
+        re-places the region around the recovered tiles so residents can
+        reclaim them.  Returns any displaced app names (always empty:
+        healing only ever widens the feasible set).
+        """
+        if not tiles and not links and not drift_apps:
+            raise ValueError("heal needs tiles, links and/or drift_apps")
+        t0 = time.perf_counter()
+        if tiles:
+            self.chip.heal_tiles(tiles)
+        for a, b in links or []:
+            self.chip.heal_link(a, b)
+        for a in drift_apps or []:
+            self.chip.clear_drift(a)
+        stale = self.stale_apps()
+        event = AdmissionEvent(
+            kind="heal", app="*",
+            tiles=sorted(int(t) for t in tiles or []),
+            wall_s=time.perf_counter() - t0,
+        )
+        self._stamp_chip_metrics(event)
+        self._refresh_rate_snapshot()
+        self.events.append(event)
+        if not remap:
+            return []
+        return self.remap(
+            healed_tiles=sorted(int(t) for t in tiles or []),
+            stale=stale,
+        )
+
+    def remap(
+        self,
+        *,
+        failed_tiles: Optional[list[int]] = None,
+        healed_tiles: Optional[list[int]] = None,
+        stale: Optional[list[str]] = None,
+    ) -> list[str]:
+        """Incrementally recover the placement after a chip mutation.
+
+        Never a from-scratch re-placement: (1) residents bound to dead
+        tiles are found; components with NO alive candidate tile left are
+        released with explicit ``"displaced"`` events (never silently
+        dropped); (2) the surviving dead-bound clusters are migrated to
+        the nearest alive candidate tile (seed repair — the cheapest
+        feasible post-fault placement) and the repaired seed's chip
+        throughput is stamped; (3) the affected region — the tile-sharing
+        components of the broken/``stale`` apps plus components within
+        ``region_radius`` of the failed/healed tiles — is re-optimized
+        per component with the PR-6 floor machinery, seeded from the
+        repaired binding.  The final ``"remap"`` event records
+        ``seed_throughput``; ``chip_throughput >= seed_throughput`` holds
+        by construction (the seed is always in the candidate pool), so
+        recovery never lands below the best repaired placement and
+        untouched tenants are never disturbed.  Returns displaced names.
+        """
+        t0 = time.perf_counter()
+        displaced: list[str] = []
+        if not self.state.allocated:
+            return displaced
+        broken = [
+            n for n in sorted(self.state.allocated)
+            if self.chip.dead[self.reports[n].binding].any()
+        ]
+        if broken:
+            broken_set = set(broken)
+            doomed: list[list[str]] = [
+                sorted(c) for c in self._tile_components()
+                if broken_set & set(c) and not self._component_allowed(sorted(c))
+            ]
+            for comp in doomed:
+                for n in comp:
+                    self._release(n, "displaced")
+                    displaced.append(n)
+            broken = [n for n in broken if n in self.state.allocated]
+        if broken:
+            # seed repair: minimally migrate dead-bound clusters so the
+            # state itself is feasible before any optimization runs
+            broken_set = set(broken)
+            for comp in [sorted(c) for c in self._tile_components()]:
+                if not (broken_set & set(comp)):
+                    continue
+                arts, union, order, binding, offsets = self._sub_union(comp)
+                binding = self._repair_binding(
+                    binding, self._component_allowed(comp)
+                )
+                union_orders = project_order(order, binding, self.hw.n_tiles)
+                for k, name in enumerate(comp):
+                    lo, hi = int(offsets[k]), int(offsets[k + 1])
+                    b_app = binding[lo:hi].copy()
+                    self.state.allocated[name] = sorted(
+                        {int(t) for t in b_app}
+                    )
+                    old = self.reports[name]
+                    self.reports[name] = CompileReport(
+                        app=name,
+                        binding=b_app,
+                        orders=[
+                            [a - lo for a in tile_order if lo <= a < hi]
+                            for tile_order in union_orders
+                        ],
+                        throughput=old.throughput,
+                        bind_time_s=old.bind_time_s,
+                        schedule_time_s=old.schedule_time_s,
+                    )
+                    self._bump_epoch(name)
+        if not self.state.allocated:
+            return displaced
+        # the repaired seed IS a feasible placement under the current
+        # chip state: its rate is the never-regress floor of this remap
+        m_seed = self.chip_metrics()
+        seed_thr = (
+            m_seed["chip_throughput"] if m_seed is not None else 0.0
+        )
+        event_apps = (
+            set(broken) | set(stale or [])
+        ) & set(self.state.allocated)
+        if healed_tiles and m_seed is not None:
+            # a heal is the cheap moment to attack the CHIP bottleneck:
+            # the slowest component's own chip state never changes when
+            # capacity returns elsewhere, so it is never rate-stale and
+            # no incremental event would ever re-seed it — each heal
+            # re-optimizes it (with growth) and walks the incremental
+            # placement back toward the full re-optimization's quality
+            slowest = min(
+                m_seed["app_throughputs"].values(), default=float("inf")
+            )
+            event_apps |= {
+                n for n, r in m_seed["app_throughputs"].items()
+                if r <= slowest * (1 + 1e-9)
+            }
+        event_apps = sorted(event_apps)
+        # fault remaps stay latency-critical: only HEALED tiles are
+        # immediate placement opportunities for neighbors (dead tiles
+        # attract nobody, and every app a failure can affect — dead-bound
+        # or rate-stale — is already in event_apps).  The failed tiles'
+        # neighborhood is queued instead and consolidated by the next
+        # growing rebalance (churn or heal), off the recovery path.
+        if failed_tiles:
+            self._pending_consolidation.update(int(t) for t in failed_tiles)
+        freed = set(healed_tiles or [])
+        if freed and self._pending_consolidation:
+            freed |= self._pending_consolidation
+            self._pending_consolidation.clear()
+        freed = sorted(freed)
+        region = self._affected_region(
+            event_apps=event_apps or None,
+            freed_tiles=freed or None,
+            grow=bool(healed_tiles),
+        ) or []
+        if not region and not broken and not displaced:
+            return displaced   # mutation touched nothing resident
+        if region:
+            self._optimize_region(region)
+        m = self.chip_metrics()
+        thr = m["chip_throughput"] if m is not None else 0.0
+        for name in region:
+            self.reports[name].throughput = thr
+        event = AdmissionEvent(
+            kind="remap", app="*",
+            tiles=sorted(
+                {int(t) for n in region for t in self.state.allocated[n]}
+            ),
+            wall_s=time.perf_counter() - t0,
+            throughput=thr,
+            scope="region", region_apps=len(region),
+            seed_throughput=seed_thr,
+        )
+        if self.track_chip_metrics and m is not None:
+            event.chip_throughput = thr
+            event.chip_energy = m["chip_energy"]
+            event.app_throughputs = dict(m["app_throughputs"])
+            self._app_rate_snapshot = dict(m["app_throughputs"])
+        self.events.append(event)
+        return displaced
+
     # -- chip-level placement (the union-graph objective layer) ---------
     def _resident_union(self):
         """Union view of all resident apps: graph, order, binding, offsets.
@@ -733,6 +1077,30 @@ class AdmissionController:
         self._epoch_counter += 1
         self._binding_epoch[app] = self._epoch_counter
 
+    def _union_rate_scale(self, arts) -> Optional[np.ndarray]:
+        """Per-flow-edge drift multipliers of a union over ``arts``.
+
+        The union's flow (data) edges are the per-app channel tables
+        concatenated in app order (:func:`~repro.core.sdfg.disjoint_union`
+        preserves table order; :func:`~repro.core.sdfg.hardware_static_parts`
+        drops only self-edges), so each app's scalar drift factor repeats
+        over its own channel count.  None when no member app drifts.
+        """
+        if not self.chip.drift:
+            return None
+        parts = [
+            np.full(
+                a.clustered.channel_src.size,
+                self.chip.drift.get(a.app, 1.0),
+                dtype=np.float64,
+            )
+            for a in arts
+        ]
+        if not parts:
+            return None
+        out = np.concatenate(parts)
+        return None if np.all(out == 1.0) else out
+
     def _tile_components(self) -> list[list[str]]:
         """Tile-sharing components of the residents (deterministic order).
 
@@ -770,21 +1138,35 @@ class AdmissionController:
     def _component_record(self, comp: list[str]) -> dict:
         """Steady-state record of ONE tile-sharing component (cached).
 
-        Keyed on each member's binding epoch: any rebalance or admission
-        that rewrites a member's binding invalidates exactly this record
-        and no other.  Stores the component period (max over its graph
-        sub-components), its dynamic energy, occupied tiles, NoC cut, and
-        every member app's TRUE per-app period.
+        Keyed on each member's binding epoch AND the slice of chip
+        degradation the component can SEE (its dead tiles, its
+        route-scale submatrix, its members' drift factors —
+        :meth:`ChipState.component_signature`): any rebalance or
+        admission that rewrites a member's binding invalidates exactly
+        this record and no other, and a chip mutation invalidates only
+        the components it actually touches — a fault re-scores its blast
+        radius, not every resident, and a cached period can never be
+        combined across chip states it depends on.  Stores the component
+        period (max over its graph sub-components), its dynamic energy,
+        occupied tiles, NoC cut, and every member app's TRUE per-app
+        period.
         """
-        key = tuple((n, self._binding_epoch.get(n, -1)) for n in comp)
+        foot = sorted(
+            {int(t) for n in comp for t in self.state.allocated[n]}
+        )
+        key = (self.chip.component_signature(foot, comp),) + tuple(
+            (n, self._binding_epoch.get(n, -1)) for n in comp
+        )
         rec = self._comp_cache.get(key)
         if rec is not None:
             return rec
-        _, union, order, binding, offsets = self._sub_union(comp)
+        arts, union, order, binding, offsets = self._sub_union(comp)
         labels, sub_periods, metrics = union_component_periods(
             union, binding, self.hw,
             project_order_batch(order, binding[None, :]),
             with_metrics=True,
+            chip_state=self.chip,
+            rate_scale=self._union_rate_scale(arts),
         )
         period = (
             float(sub_periods.max()) if sub_periods.size else float("inf")
@@ -840,14 +1222,17 @@ class AdmissionController:
             return None
         comps = self._tile_components()
         if exact:
-            names, _, union, order, binding, offsets = self._resident_union()
+            names, arts, union, order, binding, offsets = self._resident_union()
+            rs = self._union_rate_scale(arts)
             with record_cache_stats(self.cache_stats):
                 ob = project_order_batch(order, binding[None, :])
                 rep = batch_execute(
                     union, binding, self.hw, ob, with_energy=True,
+                    chip_state=self.chip, rate_scale=rs,
                 )
                 labels, sub_periods = union_component_periods(
-                    union, binding, self.hw, ob
+                    union, binding, self.hw, ob,
+                    chip_state=self.chip, rate_scale=rs,
                 )
             period = float(rep.periods[0])
             energy = float(rep.energies[0])
@@ -893,7 +1278,11 @@ class AdmissionController:
         }
 
     def _stamp_chip_metrics(self, event: AdmissionEvent) -> None:
-        """Record the post-event chip state onto ``event`` (when tracking)."""
+        """Record the post-event chip state onto ``event`` (when tracking).
+
+        Also refreshes the per-app rate snapshot the staleness detector
+        (:meth:`stale_apps`) compares against.
+        """
         if not self.track_chip_metrics:
             return
         m = self.chip_metrics()
@@ -901,6 +1290,9 @@ class AdmissionController:
             event.chip_throughput = m["chip_throughput"]
             event.chip_energy = m["chip_energy"]
             event.app_throughputs = dict(m["app_throughputs"])
+            self._app_rate_snapshot = dict(m["app_throughputs"])
+        else:
+            self._app_rate_snapshot = {}
 
     def _rebalance(
         self,
@@ -934,8 +1326,33 @@ class AdmissionController:
         ):
             self._rebalance_full()
             return
+        event_apps = [event_app] if event_app is not None else []
+        if self._pending_consolidation:
+            # fold the deferred fault neighborhoods into this event's
+            # region seed: consolidation rides a non-recovery event
+            freed_tiles = sorted(
+                set(freed_tiles or []) | self._pending_consolidation
+            )
+            self._pending_consolidation.clear()
+        if not self.chip.pristine:
+            # while the chip is degraded, churn events double as
+            # consolidation opportunities: also re-seed the CHIP
+            # bottleneck component, which is never rate-stale itself and
+            # would otherwise keep the post-fault placement pinned below
+            # what a full re-optimization reaches.  A pristine chip takes
+            # the exact PR-6 region path, bit for bit.
+            m = self.chip_metrics()
+            if m is not None and m["app_throughputs"]:
+                slowest = min(m["app_throughputs"].values())
+                event_apps = sorted(
+                    set(event_apps) | {
+                        n for n, r in m["app_throughputs"].items()
+                        if r <= slowest * (1 + 1e-9)
+                    }
+                )
         region = self._affected_region(
-            event_app=event_app, freed_tiles=freed_tiles
+            event_apps=event_apps or None,
+            freed_tiles=freed_tiles,
         )
         if not region:
             # an isolated eviction: the freed tiles border no resident
@@ -953,20 +1370,26 @@ class AdmissionController:
     def _affected_region(
         self,
         *,
-        event_app: Optional[str] = None,
+        event_apps: Optional[list[str]] = None,
         freed_tiles: Optional[list[int]] = None,
+        grow: bool = True,
     ) -> Optional[list[str]]:
         """Resident apps whose placement the event may affect.
 
-        Seeds from the tile-sharing component(s) the event touches, then
-        grows across components whose tile footprints sit within
+        Seeds from the tile-sharing component(s) the event touches —
+        every component containing any of ``event_apps`` (an admitted
+        app, or the broken/stale apps of a remap), plus components within
+        ``region_radius`` mesh hops of ``freed_tiles`` (an eviction's
+        released tiles, or a fault's failed / a heal's recovered tiles) —
+        then grows across components whose tile footprints sit within
         ``region_radius`` mesh hops of each other (deterministically, in
         sorted component order) while the region stays within
         ``region_max_apps``.  A seed above the cap is trimmed to the
-        nearest whole components (the event app's component is always
-        kept, even alone above the cap — any union of whole components
-        is a sound region); an empty list means no resident is affected.
-        Returns the sorted app names.
+        nearest whole components; every distance-0 component (one that
+        CONTAINS an event app) is always kept even above the cap — a
+        remap must cover all broken residents, and any union of whole
+        components is a sound region.  An empty list means no resident
+        is affected.  Returns the sorted app names.
         """
         comps = self._tile_components()
         if not comps:
@@ -980,7 +1403,7 @@ class AdmissionController:
         ]
         seed: set[int] = set()
         seed_dist: dict[int, float] = {}
-        if event_app is not None:
+        for event_app in event_apps or []:
             for i, c in enumerate(comps):
                 if event_app in c:
                     seed.add(i)
@@ -1000,13 +1423,20 @@ class AdmissionController:
         if sum(len(comps[i]) for i in seed) > self.region_max_apps:
             # over-cap seed (many components bordering the freed tiles,
             # or a component snowballed by a past full rebalance): trim
-            # to the nearest whole components.  The first — the event
-            # component — is kept even alone above the cap; dropping the
-            # rest only narrows the re-optimization, never breaks it.
+            # to the nearest whole components.  Distance-0 components —
+            # the ones CONTAINING an event app — are all kept even above
+            # the cap (a remap must cover every broken resident); nearby
+            # (distance > 0) components are added only while they fit.
+            # Dropping the rest only narrows the re-optimization, never
+            # breaks it.
             picked: list[int] = []
             total = 0
             for i in sorted(seed, key=lambda i: (seed_dist[i], i)):
-                if picked and total + len(comps[i]) > self.region_max_apps:
+                if (
+                    seed_dist[i] > 0.0
+                    and picked
+                    and total + len(comps[i]) > self.region_max_apps
+                ):
                     break
                 picked.append(i)
                 total += len(comps[i])
@@ -1014,7 +1444,12 @@ class AdmissionController:
             if total > self.region_max_apps:
                 return sorted({n for i in seed for n in comps[i]})
         region = set(seed)
-        grew = True
+        # fault remaps pass grow=False: adjacency growth co-optimizes
+        # NEIGHBORS as an opportunity heuristic, which is worth the wall
+        # time on churn events but pure recovery latency on a fault —
+        # a neighbor component's optimum provably did not move unless it
+        # is broken or rate-stale, and those are already in the seed
+        grew = grow
         while grew:
             grew = False
             for i in sorted(region):
@@ -1054,8 +1489,20 @@ class AdmissionController:
         t0 = time.perf_counter()
         names, arts, union, order, binding, offsets = self._resident_union()
         footprint = sorted(
-            {t for ts in self.state.allocated.values() for t in ts}
+            {
+                int(t)
+                for ts in self.state.allocated.values()
+                for t in ts
+                if not self.chip.dead[int(t)]
+            }
         )
+        if not footprint:
+            # every resident tile is dead — nothing to optimize over;
+            # remap() handles displacement, a plain rebalance cannot
+            return
+        # a degraded chip may leave the current binding on dead tiles;
+        # repair the seed (nearest alive footprint tile) before searching
+        binding = self._repair_binding(binding, footprint)
         gens, pop = self.joint_budget
         ch_src = np.concatenate([
             a.clustered.channel_src + off
@@ -1075,6 +1522,8 @@ class AdmissionController:
                 channel_src=ch_src, channel_dst=ch_dst, channel_rate=ch_rate,
                 population=pop, generations=gens, rng_seed=0,
                 allowed_tiles=footprint, objective=self.objective,
+                chip_state=self.chip,
+                rate_scale=self._union_rate_scale(arts),
             )
         union_orders = project_order(order, rep.binding, self.hw.n_tiles)
         thr = (
@@ -1110,6 +1559,7 @@ class AdmissionController:
             m = self.chip_metrics()
             if m is not None:
                 event.app_throughputs = dict(m["app_throughputs"])
+                self._app_rate_snapshot = dict(m["app_throughputs"])
         self.events.append(event)
 
     def _rebalance_region(self, names: list[str]) -> None:
@@ -1138,6 +1588,31 @@ class AdmissionController:
         chip period).
         """
         t0 = time.perf_counter()
+        self._optimize_region(names)
+        m = self.chip_metrics()
+        thr = m["chip_throughput"] if m is not None else 0.0
+        for name in names:
+            self.reports[name].throughput = thr
+        event = AdmissionEvent(
+            kind="rebalance", app="*",
+            tiles=sorted(
+                {int(t) for n in names for t in self.state.allocated[n]}
+            ),
+            wall_s=time.perf_counter() - t0, throughput=thr,
+            scope="region", region_apps=len(names),
+        )
+        if self.track_chip_metrics and m is not None:
+            event.chip_throughput = thr
+            event.chip_energy = m["chip_energy"]
+            event.app_throughputs = dict(m["app_throughputs"])
+            self._app_rate_snapshot = dict(m["app_throughputs"])
+        self.events.append(event)
+
+    def _optimize_region(self, names: list[str]) -> None:
+        """Sequentially optimize every tile-sharing component touching
+        ``names``, each against the floor set by everything else on the
+        chip (outside components AND the other region components' current
+        periods).  Shared by region rebalances and fault remaps."""
         region = set(names)
         comps = [
             sorted(c) for c in self._tile_components() if region & set(c)
@@ -1157,47 +1632,38 @@ class AdmissionController:
                 default=float("-inf"),
             )
             comp_periods[k] = self._optimize_component(comp, floor)
-        m = self.chip_metrics()
-        thr = m["chip_throughput"] if m is not None else 0.0
-        for name in names:
-            self.reports[name].throughput = thr
-        event = AdmissionEvent(
-            kind="rebalance", app="*",
-            tiles=sorted(
-                {int(t) for n in names for t in self.state.allocated[n]}
-            ),
-            wall_s=time.perf_counter() - t0, throughput=thr,
-            scope="region", region_apps=len(names),
-        )
-        if self.track_chip_metrics and m is not None:
-            event.chip_throughput = thr
-            event.chip_energy = m["chip_energy"]
-            event.app_throughputs = dict(m["app_throughputs"])
-        self.events.append(event)
 
-    def _optimize_component(self, names: list[str], floor: float) -> float:
-        """Re-optimize ONE tile-sharing component against ``floor``.
+    def _component_allowed(self, names: list[str]) -> list[int]:
+        """Candidate tiles of one component's region search (alive only).
 
-        Seeds from the current binding, searches the component footprint
-        plus a few ranked free tiles, writes the result back (bindings,
-        allocations, projected orders, epochs) and returns the
-        component's new (floor-clamped) period.  Oversized components —
-        possible only after a full rebalance co-located many tenants —
-        get a reduced search budget so per-event latency stays bounded.
+        The component's own (alive) footprint plus the closest free tiles
+        — ranked by mesh-hop distance to the footprint with a penalty for
+        tiles bordering an outside app (the cheap region-boundary traffic
+        term) and never including another app's tiles.  Dead tiles are
+        excluded on both sides (``free_tiles`` masks them, the footprint
+        is filtered here); a fully-dead footprint still anchors the
+        distance ranking so replacement tiles stay near the component's
+        original location.  On a DEGRADED chip the free-tile pool is
+        widened (2x the footprint instead of matching it): a drifted or
+        throttled component recovers chip throughput by spreading over
+        free tiles, and the region search can only use tiles it is
+        offered — cross-component tile stealing stays reserved for the
+        full fallback either way.  An EMPTY result means the component
+        has no alive candidate tile at all — the displacement case.
         """
-        from .optimize import optimize_binding_graph
-
-        arts, union, order, binding, offsets = self._sub_union(names)
         footprint = sorted(
             {int(t) for n in names for t in self.state.allocated[n]}
         )
-        # candidate tiles: region footprint + the closest free tiles,
-        # boundary-penalized (outside apps' tiles are NEVER candidates)
-        allowed = list(footprint)
+        alive_fp = [t for t in footprint if not self.chip.dead[t]]
+        allowed = list(alive_fp)
         free = np.asarray(self.state.free_tiles(), dtype=np.int64)
         if free.size and footprint:
-            fp = np.asarray(footprint, dtype=np.int64)
-            dist = self.hw.hops_array(free[:, None], fp[None, :]).min(axis=1)
+            anchor = np.asarray(
+                alive_fp if alive_fp else footprint, dtype=np.int64
+            )
+            dist = self.hw.hops_array(
+                free[:, None], anchor[None, :]
+            ).min(axis=1)
             outside = sorted({
                 int(t)
                 for n, ts in self.state.allocated.items()
@@ -1212,10 +1678,50 @@ class AdmissionController:
                 ).min(axis=1)
                 penalty = np.where(d_out <= 1, 2.0, 0.0)
             rank = np.argsort(dist + penalty, kind="stable")
-            n_extra = max(4, len(footprint))
-            allowed = sorted(
-                set(footprint) | {int(t) for t in free[rank[:n_extra]]}
+            n_extra = (
+                max(4, len(footprint)) if self.chip.pristine
+                else max(8, 2 * len(footprint))
             )
+            allowed = sorted(
+                set(alive_fp) | {int(t) for t in free[rank[:n_extra]]}
+            )
+        return allowed
+
+    def _repair_binding(self, binding: np.ndarray, allowed: list[int]) -> np.ndarray:
+        """Minimal migration of dead-bound actors onto ``allowed`` tiles.
+
+        Every actor on a dead tile moves to the allowed tile nearest its
+        original position (deterministic: mesh-hop distance, ties to the
+        lowest tile id); actors on alive tiles stay put.  This is the
+        remap seed — the cheapest feasible post-fault placement — which
+        the region optimizer then only improves on.
+        """
+        binding = np.asarray(binding, dtype=np.int64).copy()
+        bad = self.chip.dead[binding]
+        if not bad.any():
+            return binding
+        assert allowed, "cannot repair a binding with no alive candidate tile"
+        al = np.asarray(sorted(allowed), dtype=np.int64)
+        d = self.hw.hops_array(binding[bad][:, None], al[None, :])
+        binding[bad] = al[np.argmin(d, axis=1)]
+        return binding
+
+    def _optimize_component(self, names: list[str], floor: float) -> float:
+        """Re-optimize ONE tile-sharing component against ``floor``.
+
+        Seeds from the current binding (repaired off dead tiles first),
+        searches the component footprint plus a few ranked free tiles
+        (:meth:`_component_allowed`), writes the result back (bindings,
+        allocations, projected orders, epochs) and returns the
+        component's new (floor-clamped) period.  Oversized components —
+        possible only after a full rebalance co-located many tenants —
+        get a reduced search budget so per-event latency stays bounded.
+        """
+        from .optimize import optimize_binding_graph
+
+        arts, union, order, binding, offsets = self._sub_union(names)
+        allowed = self._component_allowed(names)
+        binding = self._repair_binding(binding, allowed)
         gens, pop = self.joint_budget
         if len(names) > self.region_max_apps:
             gens = 1
@@ -1239,6 +1745,8 @@ class AdmissionController:
                 population=pop, generations=gens, rng_seed=0,
                 allowed_tiles=allowed, objective=self.objective,
                 period_floor=floor,
+                chip_state=self.chip,
+                rate_scale=self._union_rate_scale(arts),
             )
         union_orders = project_order(order, rep.binding, self.hw.n_tiles)
         for k, name in enumerate(names):

@@ -192,3 +192,118 @@ def workload_suite(
         sample_workload(rng, spec=spec, scale=scale, name=f"{name_prefix}{i}")
         for i in range(n)
     ]
+
+
+# -- failure storms ------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class FaultEvent:
+    """One scheduled chip mutation of a failure storm.
+
+    ``t`` is the (dimensionless) arrival time used only for ordering and
+    inter-arrival statistics; ``kind`` selects the controller call:
+    ``"fail"`` carries ``tiles``, ``"throttle"`` carries a ``link``
+    (adjacent tile pair) and a slow-down ``factor``, ``"drift"`` carries
+    an ``app`` name and a rate ``factor``; ``"heal"`` carries either the
+    ``tiles`` or the ``link`` being restored.
+    """
+
+    t: float
+    kind: str                                   # fail | heal | throttle | drift
+    tiles: tuple[int, ...] = ()
+    link: Optional[tuple[int, int]] = None
+    app: Optional[str] = None
+    factor: float = 1.0
+
+
+def failure_storm(
+    n_faults: int,
+    n_tiles: int,
+    *,
+    seed: int = 0,
+    rate: float = 1.0,
+    tiles_per_fault: int = 1,
+    heal_after: Optional[float] = None,
+    p_throttle: float = 0.0,
+    p_drift: float = 0.0,
+    drift_apps: Sequence[str] = (),
+    drift_range: tuple[float, float] = (0.5, 3.0),
+    throttle_range: tuple[float, float] = (2.0, 8.0),
+    max_dead_frac: float = 0.25,
+    mesh_side: Optional[int] = None,
+) -> list[FaultEvent]:
+    """Poisson failure storm: a deterministic, time-sorted event list.
+
+    Arrivals are exponential with ``rate`` events per unit time.  Each
+    arrival is a tile failure (``tiles_per_fault`` distinct uniform picks
+    over the tiles still alive in the generator's own bookkeeping), a
+    link throttle with probability ``p_throttle`` (a uniformly-picked
+    mesh-adjacent pair, factor log-uniform over ``throttle_range``), or a
+    spike-rate drift with probability ``p_drift`` (an app uniform over
+    ``drift_apps``, factor log-uniform over ``drift_range``).  With
+    ``heal_after`` every failed tile set is revived — and every throttled
+    link restored — that much later, so degradation stays transient and
+    the dead fraction stays bounded; independent of healing, no failure
+    is emitted that would push the dead fraction above ``max_dead_frac``
+    (the arrival is skipped, keeping the storm well-posed on small
+    meshes; a storm whose remaining arrivals are ALL skippable ends
+    early rather than spinning).  Same ``seed`` -> identical storm,
+    always.
+    """
+    assert 0.0 <= p_throttle + p_drift <= 1.0
+    side = mesh_side if mesh_side is not None else int(round(n_tiles ** 0.5))
+    assert side * side == n_tiles, "failure_storm assumes a square mesh"
+    rng = np.random.default_rng(seed)
+    events: list[FaultEvent] = []
+    dead: set[int] = set()
+    t = 0.0
+    made = 0
+    stalled = 0
+    while made < n_faults:
+        if stalled > 100 + 10 * n_faults:
+            break   # every remaining arrival is skippable (cap saturated)
+        t += float(rng.exponential(1.0 / rate))
+        u = float(rng.random())
+        if u < p_throttle:
+            a = int(rng.integers(n_tiles))
+            x, y = a % side, a // side
+            opts = []
+            if x + 1 < side:
+                opts.append(a + 1)
+            if y + 1 < side:
+                opts.append(a + side)
+            if not opts:
+                stalled += 1
+                continue
+            b = int(opts[int(rng.integers(len(opts)))])
+            lo, hi = np.log(throttle_range[0]), np.log(throttle_range[1])
+            f = float(np.exp(rng.uniform(lo, hi)))
+            events.append(FaultEvent(t=t, kind="throttle", link=(a, b), factor=f))
+            if heal_after is not None:
+                events.append(
+                    FaultEvent(t=t + float(heal_after), kind="heal", link=(a, b))
+                )
+        elif u < p_throttle + p_drift and drift_apps:
+            app = str(drift_apps[int(rng.integers(len(drift_apps)))])
+            lo, hi = np.log(drift_range[0]), np.log(drift_range[1])
+            f = float(np.exp(rng.uniform(lo, hi)))
+            events.append(FaultEvent(t=t, kind="drift", app=app, factor=f))
+        else:
+            alive = sorted(set(range(n_tiles)) - dead)
+            k = min(tiles_per_fault, len(alive))
+            if k == 0 or (len(dead) + k) / n_tiles > max_dead_frac:
+                stalled += 1
+                continue
+            picks = tuple(
+                int(alive[i])
+                for i in sorted(rng.choice(len(alive), size=k, replace=False))
+            )
+            dead.update(picks)
+            events.append(FaultEvent(t=t, kind="fail", tiles=picks))
+            if heal_after is not None:
+                events.append(
+                    FaultEvent(t=t + float(heal_after), kind="heal", tiles=picks)
+                )
+        made += 1
+        stalled = 0
+    events.sort(key=lambda e: (e.t, e.kind))
+    return events

@@ -1,0 +1,404 @@
+"""Fault- and drift-adaptive runtime re-mapping (PR 8).
+
+ChipState degradation semantics, their threading through the batched
+engine, the controller's inject/detect/remap loop (never-regress, explicit
+displacement, cached-vs-exact agreement after every mutation), and the
+failure-storm generator.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    DYNAP_SE,
+    DYNAP_SE_16,
+    AdmissionController,
+    ChipState,
+    batch_execute,
+    failure_storm,
+    sdfg_from_clusters,
+    small_app,
+)
+from repro.core.engine import project_order_batch
+from tests._hypothesis_compat import given, settings, st
+
+HW64 = dataclasses.replace(DYNAP_SE, n_tiles=64)
+
+
+def _apps(n, seed0=300, prefix="f"):
+    apps = []
+    for i in range(n):
+        snn = small_app(150, 1800, seed=seed0 + i)
+        snn.name = f"{prefix}{i}"
+        apps.append(snn)
+    return apps
+
+
+def _controller(n_apps=4, seed0=300, prefix="f", hw=HW64, request=3):
+    ctl = AdmissionController(hw, placement="joint", region_scope=True)
+    for snn in _apps(n_apps, seed0=seed0, prefix=prefix):
+        ctl.admit(snn, n_tiles_request=request)
+    return ctl
+
+
+def _bound_tiles(ctl):
+    return sorted({int(t) for ts in ctl.running().values() for t in ts})
+
+
+def _no_dead_bindings(ctl):
+    return all(
+        not ctl.chip.dead[int(t)]
+        for ts in ctl.running().values()
+        for t in ts
+    )
+
+
+def _cached_matches_exact(ctl, rtol=1e-6):
+    mc = ctl.chip_metrics()
+    me = ctl.chip_metrics(exact=True)
+    if mc is None or me is None:
+        return mc is me
+    return bool(
+        np.isclose(mc["chip_throughput"], me["chip_throughput"], rtol=rtol)
+    )
+
+
+# -- ChipState -----------------------------------------------------------
+def test_chipstate_lifecycle():
+    cs = ChipState(DYNAP_SE_16)
+    assert cs.pristine and cs.n_alive == 16 and cs.epoch == 0
+    cs.fail_tiles([3, 7])
+    assert not cs.pristine and cs.n_alive == 14
+    assert cs.dead[[3, 7]].all() and cs.epoch == 1
+    assert cs.dead_rows(np.array([[0, 1], [2, 3], [7, 7]])).tolist() == [
+        False, True, True,
+    ]
+    cs.heal_tiles([3])
+    assert cs.dead[7] and not cs.dead[3] and cs.epoch == 2
+    cs.heal_tiles([7])
+    assert cs.pristine
+    cs.set_drift("a", 2.0)
+    assert not cs.pristine and cs.drift == {"a": 2.0}
+    cs.set_drift("a", 1.0)   # factor 1.0 removes the entry
+    assert cs.pristine
+    cs.throttle_link(0, 1, 4.0)
+    assert not cs.pristine
+    cs.heal_link(0, 1)
+    assert cs.pristine
+
+
+def test_chipstate_validation():
+    cs = ChipState(DYNAP_SE_16)
+    with pytest.raises(ValueError):
+        cs.fail_tiles([16])
+    with pytest.raises(ValueError):
+        cs.throttle_link(0, 5, 2.0)   # not mesh-adjacent (hops 2)
+    with pytest.raises(ValueError):
+        cs.throttle_link(0, 1, 0.5)   # a throttle can only slow down
+    with pytest.raises(ValueError):
+        cs.set_drift("a", 0.0)
+    assert cs.pristine
+
+
+def test_route_scale_xy_crossings():
+    # 4x4 mesh, throttle the horizontal link (1,1)-(2,1): tiles 5-6
+    cs = ChipState(DYNAP_SE_16)
+    assert cs.route_scale() is None
+    cs.throttle_link(5, 6, 3.0)
+    rs = cs.route_scale()
+    # XY routes horizontally along the SOURCE row first: 4->7 sweeps row 1
+    assert rs[4, 7] == 3.0 and rs[4, 3] == 3.0
+    # row-0 horizontal then column vertical never touches row 1's links
+    assert rs[1, 6] == 1.0 and rs[0, 3] == 1.0
+    # reverse direction crosses the same undirected link
+    assert rs[7, 4] == 3.0
+    assert rs[5, 5] == 1.0
+    src = np.array([4, 1])
+    dst = np.array([7, 6])
+    assert cs.route_scale_array(src, dst).tolist() == [3.0, 1.0]
+    cs.heal_link(5, 6)
+    assert cs.route_scale() is None
+
+
+def test_comm_delay_link_scale():
+    hw = DYNAP_SE_16
+    spikes = np.array([10.0, 10.0, 0.0])
+    hops = np.array([2, 2, 0])
+    base = hw.comm_delay_from_hops(spikes, hops)
+    slow = hw.comm_delay_from_hops(spikes, hops, np.array([1.0, 4.0, 4.0]))
+    assert slow[0] == base[0] and slow[1] > base[1]
+    assert base[2] == 0.0 and slow[2] == 0.0   # co-located stays free
+
+
+# -- engine threading ----------------------------------------------------
+def test_engine_degradation_scoring():
+    ctl = _controller(1, prefix="e")
+    name = "e0"
+    art = ctl.artifacts[(name, ctl.hw)]
+    graph = art.graph if art.graph is not None else sdfg_from_clusters(
+        art.clustered, hw=ctl.hw
+    )
+    binding = ctl.reports[name].binding
+    ob = project_order_batch(
+        [int(a) for a in art.single_order], binding[None, :]
+    )
+    base = batch_execute(graph, binding, ctl.hw, ob, with_energy=True)
+    # a pristine chip state changes nothing, bit for bit
+    rep = batch_execute(
+        graph, binding, ctl.hw, ob, chip_state=ChipState(ctl.hw)
+    )
+    assert rep.periods[0] == base.periods[0]
+    # a dead bound tile makes the row infeasible
+    cs = ChipState(ctl.hw)
+    cs.fail_tiles([int(binding[0])])
+    rep = batch_execute(graph, binding, ctl.hw, ob, chip_state=cs)
+    assert np.isinf(rep.periods[0])
+    # throttling every link can only slow the row down
+    cs = ChipState(ctl.hw)
+    side = ctl.hw.mesh_shape[1]
+    for t in range(ctl.hw.n_tiles):
+        if t % side + 1 < side:
+            cs.throttle_link(t, t + 1, 8.0)
+        if t + side < ctl.hw.n_tiles:
+            cs.throttle_link(t, t + side, 8.0)
+    rep = batch_execute(graph, binding, ctl.hw, ob, chip_state=cs)
+    assert rep.periods[0] >= base.periods[0]
+    # rate drift scales the observed spike traffic
+    rep = batch_execute(
+        graph, binding, ctl.hw, ob, with_energy=True, rate_scale=2.0
+    )
+    assert rep.periods[0] >= base.periods[0]
+    assert (
+        float(rep.metrics.cut_traffic[0])
+        == pytest.approx(2 * float(base.metrics.cut_traffic[0]))
+    )
+
+
+# -- controller: detection + remap ---------------------------------------
+def test_stale_detection_scopes_to_affected_apps():
+    ctl = _controller(3, prefix="s")
+    assert ctl.stale_apps() == []
+    # mutate the chip directly (no event): detection must flag exactly
+    # the drifted app — a no-op factor flags nobody
+    ctl.chip.set_drift("s1", 3.0)
+    stale = ctl.stale_apps()
+    assert "s1" in stale
+    affected = {
+        n for c in ctl._tile_components() if "s1" in c for n in c
+    }
+    assert set(stale) <= affected
+    ctl.remap(stale=stale)
+    assert ctl.stale_apps() == []
+    assert _cached_matches_exact(ctl)
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(min_value=0, max_value=10_000))
+def test_fault_remap_never_regresses(seed):
+    """Post-remap chip throughput >= the repaired seed placement's, no
+    dead tile ever bound, cached combine == exact re-score."""
+    rng = np.random.default_rng(seed)
+    ctl = _controller(4, seed0=400 + seed % 7, prefix=f"p{seed % 7}_")
+    for _ in range(2):
+        bound = [t for t in _bound_tiles(ctl) if not ctl.chip.dead[t]]
+        if not bound:
+            break
+        victim = int(bound[int(rng.integers(len(bound)))])
+        ctl.inject_fault([victim])
+        remaps = [e for e in ctl.events if e.kind == "remap"]
+        assert remaps, "a fault on a bound tile must trigger a remap"
+        e = remaps[-1]
+        assert e.chip_throughput >= e.seed_throughput * (1 - 1e-6)
+        assert _no_dead_bindings(ctl)
+        assert _cached_matches_exact(ctl)
+
+
+def test_random_event_sequence_cached_vs_exact():
+    """Randomized fault/heal/drift/throttle/churn sequence: after EVERY
+    event the cached component combine must match the exact full-union
+    re-score and no resident may hold a dead tile."""
+    rng = np.random.default_rng(11)
+    ctl = _controller(5, prefix="q")
+    names = [f"q{i}" for i in range(5)]
+    side = ctl.hw.mesh_shape[1]
+    failed: list[int] = []
+    for step in range(14):
+        k = int(rng.integers(6))
+        if k == 0 and len(failed) < 6:
+            bound = [t for t in _bound_tiles(ctl) if not ctl.chip.dead[t]]
+            if bound:
+                t = int(bound[int(rng.integers(len(bound)))])
+                ctl.inject_fault([t])
+                failed.append(t)
+        elif k == 1 and failed:
+            ctl.heal([failed.pop(int(rng.integers(len(failed))))])
+        elif k == 2:
+            app = names[int(rng.integers(len(names)))]
+            ctl.inject_drift(app, float(rng.uniform(0.5, 3.0)))
+        elif k == 3:
+            a = int(rng.integers(ctl.hw.n_tiles))
+            b = a + 1 if a % side + 1 < side else a - 1
+            ctl.inject_fault(links=[(min(a, b), max(a, b))], throttle=4.0)
+        elif k == 4:
+            app = names[int(rng.integers(len(names)))]
+            if app in ctl.state.allocated:
+                ctl.evict(app)
+        else:
+            app = names[int(rng.integers(len(names)))]
+            if app not in ctl.state.allocated:
+                ctl.admit(app, n_tiles_request=3)
+        assert _no_dead_bindings(ctl), f"dead binding after step {step}"
+        assert _cached_matches_exact(ctl), f"cache drift after step {step}"
+
+
+def _trajectory_signature(ctl):
+    """Everything deterministic about a trajectory (wall clocks excluded)."""
+    return [
+        (
+            e.kind, e.app, tuple(e.tiles), round(e.throughput, 12),
+            round(e.chip_throughput, 12), round(e.seed_throughput, 12),
+            e.scope, e.region_apps, round(e.factor, 12),
+        )
+        for e in ctl.events
+    ]
+
+
+def test_fault_trajectory_deterministic():
+    def scenario():
+        ctl = _controller(4, prefix="d")
+        victims = _bound_tiles(ctl)[:2]
+        ctl.inject_fault([victims[0]])
+        ctl.inject_drift("d2", 1.7)
+        ctl.inject_fault([victims[1]])
+        ctl.heal(victims, drift_apps=["d2"])
+        return ctl
+
+    a, b = scenario(), scenario()
+    assert _trajectory_signature(a) == _trajectory_signature(b)
+    assert np.allclose(
+        a.chip_metrics()["chip_throughput"],
+        b.chip_metrics()["chip_throughput"],
+        rtol=0,
+    )
+
+
+def test_displacement_is_explicit():
+    """Killing every tile displaces residents with explicit events —
+    never a silent drop — and the books stay consistent."""
+    ctl = _controller(2, prefix="x", hw=DYNAP_SE, request=2)
+    before = set(ctl.running())
+    assert before == {"x0", "x1"}
+    displaced = ctl.inject_fault(list(range(DYNAP_SE.n_tiles)))
+    assert set(displaced) == before
+    assert ctl.running() == {}
+    kinds = [e.kind for e in ctl.events]
+    assert kinds.count("displaced") == 2
+    # accounting: every pre-fault resident is displaced or still running
+    assert before == set(displaced) | set(ctl.running())
+    # the chip heals back to a usable state
+    ctl.heal(list(range(DYNAP_SE.n_tiles)))
+    assert ctl.chip.pristine
+    ctl.admit("x0", n_tiles_request=2)
+    assert "x0" in ctl.running()
+
+
+def test_remap_matches_full_reoptimization_feasibility():
+    """Oracle cross-check: after a fault+remap (a) survivors ∪ displaced
+    == pre-fault residents, (b) a from-scratch controller on an
+    identically-degraded chip admits exactly the survivor set, (c) a
+    forced FULL joint re-optimization — seeded, hence never-worse — does
+    not beat the incremental remap by more than the optimizer's own
+    search slack."""
+    ctl = _controller(5, prefix="o")
+    before = set(ctl.running())
+    victims = _bound_tiles(ctl)[:2]
+    displaced = ctl.inject_fault(victims)
+    assert before == set(displaced) | set(ctl.running())
+    remap_thr = ctl.chip_metrics()["chip_throughput"]
+
+    fresh = AdmissionController(HW64, placement="joint", region_scope=True)
+    fresh.chip.fail_tiles(victims)
+    for snn in _apps(5, seed0=300, prefix="o"):
+        if snn.name in ctl.running():
+            fresh.admit(snn, n_tiles_request=3)
+    assert set(fresh.running()) == set(ctl.running())
+    assert _no_dead_bindings(fresh)
+
+    ctl._rebalance_full()   # exact full-union re-opt, same degraded chip
+    full_thr = ctl.chip_metrics()["chip_throughput"]
+    assert full_thr >= remap_thr * (1 - 1e-6)
+    assert _no_dead_bindings(ctl)
+
+
+def test_heal_recovers_throughput():
+    ctl = _controller(4, prefix="h")
+    victim = _bound_tiles(ctl)[0]
+    ctl.inject_fault([victim])
+    degraded = ctl.chip_metrics()["chip_throughput"]
+    ctl.heal([victim])
+    assert ctl.chip.pristine
+    healed = ctl.chip_metrics()["chip_throughput"]
+    # healing only widens the feasible set; the remap seeds from the
+    # degraded placement, so throughput can only recover or hold
+    assert healed >= degraded * (1 - 1e-6)
+    assert _cached_matches_exact(ctl)
+
+
+def test_remap_skips_untouched_tenants():
+    """A fault on a far-away FREE tile must not disturb any resident."""
+    ctl = _controller(3, prefix="u")
+    bound = set(_bound_tiles(ctl))
+    free = [t for t in range(HW64.n_tiles) if t not in bound]
+    # the farthest free tile from every binding (corners are farthest)
+    far = max(
+        free,
+        key=lambda t: min(
+            ctl.hw.hops_array(np.array([t]), np.array([b]))[0] for b in bound
+        ),
+    )
+    before = {n: tuple(ts) for n, ts in ctl.running().items()}
+    thr0 = ctl.chip_metrics()["chip_throughput"]
+    ctl.inject_fault([int(far)])
+    after = {n: tuple(ts) for n, ts in ctl.running().items()}
+    assert before == after
+    assert ctl.chip_metrics()["chip_throughput"] == pytest.approx(
+        thr0, rel=1e-9
+    )
+
+
+# -- failure storms ------------------------------------------------------
+def test_failure_storm_deterministic_and_bounded():
+    kw = dict(
+        seed=5, heal_after=2.0, p_throttle=0.2, p_drift=0.2,
+        drift_apps=["a", "b"], max_dead_frac=0.25,
+    )
+    s1 = failure_storm(25, 64, **kw)
+    s2 = failure_storm(25, 64, **kw)
+    assert s1 == s2
+    assert all(s1[i].t <= s1[i + 1].t for i in range(len(s1) - 1))
+    kinds = {e.kind for e in s1}
+    assert kinds <= {"fail", "heal", "throttle", "drift"}
+    dead: set[int] = set()
+    slow: set[tuple] = set()
+    link_heals = 0
+    for e in s1:
+        if e.kind == "fail":
+            dead.update(e.tiles)
+            assert len(dead) / 64 <= 0.25
+        elif e.kind == "heal" and e.link is not None:
+            assert e.link in slow   # link heals pair with earlier throttles
+            slow.discard(e.link)
+            link_heals += 1
+        elif e.kind == "heal":
+            assert e.tiles and set(e.tiles) <= dead   # pair with earlier fails
+            dead.difference_update(e.tiles)
+        elif e.kind == "throttle":
+            a, b = e.link
+            assert b - a in (1, 8) and e.factor >= 2.0
+            slow.add(e.link)
+        else:
+            assert e.app in ("a", "b") and e.factor > 0
+    assert link_heals == sum(e.kind == "throttle" for e in s1)
+    assert failure_storm(25, 64, seed=6) != s1
