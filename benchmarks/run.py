@@ -9,6 +9,8 @@ roofline table from dry-run artifacts.  Prints CSV blocks.
   PYTHONPATH=src python -m benchmarks.run energy       # + BENCH_energy.json
   PYTHONPATH=src python -m benchmarks.run stress       # + BENCH_stress.json (full 32x32)
   PYTHONPATH=src python -m benchmarks.run faults       # + BENCH_faults.json (failure storm)
+  PYTHONPATH=src python -m benchmarks.run maxplus      # + BENCH_maxplus.json (backend sweep)
+  PYTHONPATH=src python -m benchmarks.run serving      # + BENCH_serving.json (burst admissions)
 
 The design-space sweep benchmark (batched Max-Plus vs per-graph loop)
 lives in its own module:  PYTHONPATH=src python -m benchmarks.sweep
@@ -90,6 +92,26 @@ def main() -> None:
         t0 = time.perf_counter()
         rows, summary, _ = faults.run(smoke=want is None)
         print(f"\n# faults  ({time.perf_counter() - t0:.1f}s)")
+        for row in rows:
+            print(",".join(str(x) for x in row))
+        print("##", summary)
+
+    if want is None or "maxplus" in want:
+        from . import maxplus_backends
+
+        t0 = time.perf_counter()
+        rows, summary, _ = maxplus_backends.run(smoke=want is None)
+        print(f"\n# maxplus_backends  ({time.perf_counter() - t0:.1f}s)")
+        for row in rows:
+            print(",".join(str(x) for x in row))
+        print("##", summary)
+
+    if want is None or "serving" in want:
+        from . import serving
+
+        t0 = time.perf_counter()
+        rows, summary, _ = serving.run(smoke=want is None)
+        print(f"\n# serving  ({time.perf_counter() - t0:.1f}s)")
         for row in rows:
             print(",".join(str(x) for x in row))
         print("##", summary)

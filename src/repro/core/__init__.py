@@ -15,11 +15,16 @@ from .engine import (
     CompileCacheStats,
     EngineReport,
     OrderBatch,
+    PreparedExec,
     batch_execute,
+    batch_execute_fused,
     batch_throughputs,
     compile_cache_stats,
+    finish_execution,
+    fuse_stacks,
     order_cycle_lower_bounds,
     pad_stack_to_buckets,
+    prepare_execution,
     project_order_batch,
     record_cache_stats,
     reset_compile_cache_stats,
@@ -79,6 +84,7 @@ from .optimize import (
     bind_optimized,
     optimize_binding,
     optimize_binding_graph,
+    optimize_binding_graphs_fused,
 )
 from .partition import (
     Cluster,
@@ -99,6 +105,7 @@ from .runtime import (
     single_tile_order,
     verify_deadlock_free,
 )
+from .serving import ServiceTicket, ServingQueue
 from .schedule import (
     ExecutionTrace,
     SelfTimedExecutor,

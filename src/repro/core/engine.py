@@ -45,7 +45,7 @@ from .hardware import ChipState, HardwareConfig
 from .maxplus import (
     NEG_INF,
     EdgeStack,
-    _on_tpu as _engine_on_tpu,
+    _on_accelerator as _engine_on_accelerator,
     evolve_batch,
     maxplus_matrix_batch,
     mcr_batch,
@@ -733,6 +733,222 @@ class EngineReport:
         return int(self.periods.size)
 
 
+@dataclasses.dataclass
+class PreparedExec:
+    """One application's stacked analysis inputs, built but not yet solved.
+
+    Produced by :func:`prepare_execution`; consumed either by
+    :func:`batch_execute` (one solve per prepared stack) or by
+    :func:`batch_execute_fused`, which concatenates the rows of MANY
+    independent prepared stacks into one fused :class:`EdgeStack` so a
+    whole tick's worth of scoring — several optimizer populations,
+    several region components — pays device dispatch and compile-cache
+    entry once.  ``rel_tol`` rides along so a fused solve can take the
+    tightest tolerance over its members (tighter is sound for all rows,
+    it only costs bisection rounds).
+    """
+
+    app: SDFG
+    bindings: np.ndarray                 # (B, n_actors) int tile ids
+    hw: HardwareConfig
+    stack: EdgeStack
+    metrics: Optional[ChipMetrics]
+    lo0: Optional[np.ndarray]            # (B,) per-row lower bounds
+    n_rows: int
+    n_act: int
+    rel_tol: float
+    with_energy: bool
+    chip_state: Optional[ChipState]
+    build_time_s: float
+
+
+def prepare_execution(
+    app: SDFG,
+    bindings,
+    hw: HardwareConfig,
+    orders_list: Optional[OrdersLike] = None,
+    *,
+    rel_tol: float = 1e-8,
+    with_energy: bool = False,
+    chip_state: Optional[ChipState] = None,
+    rate_scale=None,
+    relax_shortcuts: bool = True,
+) -> PreparedExec:
+    """Build one candidate batch's :class:`EdgeStack` and row bounds.
+
+    The build half of :func:`batch_execute`, factored out so independent
+    batches (different apps, different region components) can be fused
+    into a single analysis call (:func:`batch_execute_fused`).
+    """
+    bindings = _as_binding_matrix(bindings, app.n_actors)
+    t0 = time.perf_counter()
+    built = stack_hardware_aware(
+        app, bindings, hw, orders_list, relax_shortcuts=relax_shortcuts,
+        with_metrics=with_energy, chip_state=chip_state,
+        rate_scale=rate_scale,
+    )
+    stack, metrics = built if with_energy else (built, None)
+    lo0 = order_cycle_lower_bounds(app.exec_time, bindings, orders_list)
+    return PreparedExec(
+        app=app,
+        bindings=bindings,
+        hw=hw,
+        stack=stack,
+        metrics=metrics,
+        lo0=lo0,
+        n_rows=stack.n_graphs,
+        n_act=stack.n_actors,
+        rel_tol=rel_tol,
+        with_energy=with_energy,
+        chip_state=chip_state,
+        build_time_s=time.perf_counter() - t0,
+    )
+
+
+def finish_execution(
+    prep: PreparedExec,
+    periods: np.ndarray,
+    *,
+    analysis_time_s: float,
+    starts: Optional[np.ndarray] = None,
+) -> EngineReport:
+    """Turn one prepared batch's solved periods into an :class:`EngineReport`.
+
+    Slices padded rows off, masks dead-tile rows to ``inf`` under the
+    prepared :class:`~repro.core.hardware.ChipState`, and computes chip
+    energies from the metrics that rode the stack build.
+    """
+    periods = periods[:prep.n_rows]
+    chip_state = prep.chip_state
+    if chip_state is not None and chip_state.dead.any():
+        periods = np.where(
+            chip_state.dead_rows(prep.bindings), np.inf, periods
+        )
+    energies = None
+    if prep.with_energy:
+        m = prep.metrics
+        energies = prep.hw.chip_energy(
+            periods,
+            m.cut_traffic,
+            m.spike_hops,
+            m.tiles_used,
+            m.read_charge,
+        )
+    return EngineReport(
+        periods=periods,
+        starts=starts,
+        build_time_s=prep.build_time_s,
+        analysis_time_s=analysis_time_s,
+        energies=energies,
+        metrics=prep.metrics,
+    )
+
+
+def _resolve_backend(backend: str) -> str:
+    """Resolve ``"auto"``: exact device backend on any accelerator
+    (TPU *or* GPU — see :func:`~repro.core.maxplus._on_accelerator`),
+    host numpy otherwise."""
+    if backend == "auto":
+        return "csr-jit" if _engine_on_accelerator() else "edges"
+    return backend
+
+
+def fuse_stacks(
+    stacks: Sequence[EdgeStack],
+) -> tuple[EdgeStack, list[slice]]:
+    """Concatenate independent EdgeStacks into ONE row-stacked batch.
+
+    Pads every stack to the common (n_actors, n_edges) envelope — padded
+    edge slots carry ``-inf`` weight (the (max,+) neutral element) so
+    they are invisible to every backend, and extra actors are isolated —
+    then stacks rows.  The per-row lambda-search is row-local, so the
+    fused result restricted to each member's row slice is bit-for-bit
+    the result of analyzing that member alone (at equal tolerance).
+    Returns the fused stack and each member's row slice.
+    """
+    assert stacks, "need at least one stack to fuse"
+    if len(stacks) == 1:
+        return stacks[0], [slice(0, stacks[0].n_graphs)]
+    n_max = max(s.n_actors for s in stacks)
+    e_max = max(s.n_edges for s in stacks)
+    srcs, dsts, toks, ws = [], [], [], []
+    slices: list[slice] = []
+    row = 0
+    for s in stacks:
+        b, e = s.n_graphs, s.n_edges
+        pad = e_max - e
+        if pad:
+            srcs.append(np.pad(s.src, ((0, 0), (0, pad))))
+            dsts.append(np.pad(s.dst, ((0, 0), (0, pad))))
+            toks.append(np.pad(s.tokens, ((0, 0), (0, pad)),
+                               constant_values=1))
+            ws.append(np.pad(s.weights, ((0, 0), (0, pad)),
+                             constant_values=NEG_INF))
+        else:
+            srcs.append(s.src)
+            dsts.append(s.dst)
+            toks.append(s.tokens)
+            ws.append(s.weights)
+        slices.append(slice(row, row + b))
+        row += b
+    fused = EdgeStack(
+        n_actors=n_max,
+        src=np.concatenate(srcs),
+        dst=np.concatenate(dsts),
+        tokens=np.concatenate(toks),
+        weights=np.concatenate(ws),
+    )
+    return fused, slices
+
+
+def batch_execute_fused(
+    preps: Sequence[PreparedExec],
+    *,
+    backend: str = "auto",
+    pad_shapes: Optional[bool] = None,
+) -> list[EngineReport]:
+    """Solve MANY independent prepared batches in ONE analysis call.
+
+    The cross-region fused scoring path: rows from every prepared stack
+    (one optimizer generation per region component, elite re-scores,
+    pending admissions) are concatenated (:func:`fuse_stacks`) and run
+    through a single :func:`~repro.core.maxplus.mcr_batch`, so per-call
+    dispatch, trace/compile-cache entry, and (on device) kernel-launch
+    overheads are paid once per tick instead of once per region.  The
+    fused solve uses the TIGHTEST member tolerance (sound for all rows).
+    Per-member results are bit-for-bit the standalone results at that
+    tolerance (the lambda-search is row-local).  ``with_starts`` is
+    deliberately unsupported — scoring paths never need start vectors.
+    """
+    assert preps, "need at least one prepared execution to fuse"
+    t1 = time.perf_counter()
+    backend = _resolve_backend(backend)
+    if pad_shapes is None:
+        pad_shapes = backend in ("dense", "csr-jit")
+    fused, slices = fuse_stacks([p.stack for p in preps])
+    if any(p.lo0 is not None for p in preps):
+        lo0 = np.concatenate([
+            p.lo0 if p.lo0 is not None
+            else np.full(p.n_rows, -np.inf)
+            for p in preps
+        ])
+    else:
+        lo0 = None
+    rel_tol = min(p.rel_tol for p in preps)
+    if pad_shapes:
+        fused, lo0 = pad_stack_to_buckets(fused, lo0)
+    key = (backend, fused.n_graphs, fused.n_actors, fused.n_edges)
+    _CACHE_STATS.record(key)
+    for sink in _CACHE_SINKS:
+        sink.record(key)
+    periods = mcr_batch(fused, backend=backend, rel_tol=rel_tol, lo0=lo0)
+    analysis_s = (time.perf_counter() - t1) / len(preps)
+    return [
+        finish_execution(p, periods[s], analysis_time_s=analysis_s)
+        for p, s in zip(preps, slices)
+    ]
+
+
 def batch_execute(
     app: SDFG,
     bindings,
@@ -786,25 +1002,19 @@ def batch_execute(
     energy) — degraded candidates rank in the same batched pass as
     healthy ones.
     """
-    bindings = _as_binding_matrix(bindings, app.n_actors)
-    t0 = time.perf_counter()
     # shortcut edges preserve every cycle ratio but are NOT Eq.-4
     # dependencies, so the starts path must build the plain stack
-    built = stack_hardware_aware(
-        app, bindings, hw, orders_list, relax_shortcuts=not with_starts,
-        with_metrics=with_energy, chip_state=chip_state,
-        rate_scale=rate_scale,
+    prep = prepare_execution(
+        app, bindings, hw, orders_list, rel_tol=rel_tol,
+        with_energy=with_energy, chip_state=chip_state,
+        rate_scale=rate_scale, relax_shortcuts=not with_starts,
     )
-    stack, metrics = built if with_energy else (built, None)
-    t_build = time.perf_counter() - t0
 
     t1 = time.perf_counter()
-    if backend == "auto":
-        backend = "dense" if _engine_on_tpu() else "edges"
+    backend = _resolve_backend(backend)
     if pad_shapes is None:
-        pad_shapes = backend == "dense"
-    n_rows, n_act = stack.n_graphs, stack.n_actors
-    lo0 = order_cycle_lower_bounds(app.exec_time, bindings, orders_list)
+        pad_shapes = backend in ("dense", "csr-jit")
+    stack, lo0 = prep.stack, prep.lo0
     if pad_shapes:
         stack, lo0 = pad_stack_to_buckets(stack, lo0)
     key = (backend, stack.n_graphs, stack.n_actors, stack.n_edges)
@@ -812,32 +1022,17 @@ def batch_execute(
     for sink in _CACHE_SINKS:
         sink.record(key)
     periods = mcr_batch(stack, backend=backend, rel_tol=rel_tol, lo0=lo0)
-    periods = periods[:n_rows]
-    if chip_state is not None and chip_state.dead.any():
-        periods = np.where(chip_state.dead_rows(bindings), np.inf, periods)
     starts = None
     if with_starts:
         t_mat = maxplus_matrix_batch(stack)
         x, _ = evolve_batch(t_mat, iters=power_iters)
         finite = np.isfinite(x)
         lo = np.where(finite, x, np.inf).min(axis=1, keepdims=True)
-        starts = np.where(finite, x - lo, np.inf)[:n_rows, :n_act]
-    energies = None
-    if with_energy:
-        energies = hw.chip_energy(
-            periods,
-            metrics.cut_traffic,
-            metrics.spike_hops,
-            metrics.tiles_used,
-            metrics.read_charge,
-        )
-    return EngineReport(
-        periods=periods,
-        starts=starts,
-        build_time_s=t_build,
+        starts = np.where(finite, x - lo, np.inf)[:prep.n_rows, :prep.n_act]
+    return finish_execution(
+        prep, periods,
         analysis_time_s=time.perf_counter() - t1,
-        energies=energies,
-        metrics=metrics,
+        starts=starts,
     )
 
 
@@ -943,8 +1138,7 @@ def union_component_periods(
     live = np.isfinite(w)
     labels = weak_components(app.n_actors, src[live], dst[live])
     n_comp = int(labels.max(initial=-1)) + 1
-    if backend == "auto":
-        backend = "dense" if _engine_on_tpu() else "edges"
+    backend = _resolve_backend(backend)
     # row k masks every edge outside component k; shortcut edges never
     # cross components (they compose real order-cycle paths)
     mask = labels[src][None, :] == np.arange(max(n_comp, 1))[:, None]

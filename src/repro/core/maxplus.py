@@ -454,6 +454,7 @@ def mcr_batch(
     max_steps: int = 80,
     backend: str = "auto",
     lo0: Optional[np.ndarray] = None,
+    detect_deadlock: bool = False,
 ) -> np.ndarray:
     """Maximum cycle ratio for every row of an :class:`EdgeStack`.
 
@@ -461,6 +462,10 @@ def mcr_batch(
     ``lam < rho_max`` — all rows bisect together.  Inputs must be live
     graphs (a zero-token cycle drives the result to the upper bound instead
     of ``inf``); every graph built by this pipeline is live by construction.
+    ``detect_deadlock=True`` adds one probe at the interval top, where any
+    remaining positive cycle must be a zero-token one (every token-carrying
+    cycle's ratio is bounded by ``upper < hi``), and reports those rows as
+    ``inf`` — for callers feeding graphs of unknown liveness.
 
     Returns a ``(B,)`` float64 array of cycle ratios in the same time unit
     as ``stack.weights`` (microseconds throughout this pipeline);
@@ -469,17 +474,27 @@ def mcr_batch(
     the caller knows exists — e.g. a TDMA order cycle's compute sum); it
     shrinks the bisection interval and never changes the result.
 
-    ``backend``: ``"edges"`` (numpy float64, exact — default off-TPU),
-    ``"dense"`` (Pallas/jnp max-plus matrix squaring, float32), or
+    ``backend``: ``"edges"`` (numpy float64, exact — the bit-exactness
+    oracle and the default on hosts without an accelerator), ``"csr-jit"``
+    (the same exact float64 search as one jitted device program with
+    multi-lambda probing — default when any non-CPU device is present),
+    ``"dense"`` (Pallas/jnp max-plus matrix squaring, float32, opt-in), or
     ``"auto"``.
     """
     if backend == "auto":
-        backend = "dense" if _on_tpu() else "edges"
+        backend = "csr-jit" if _on_accelerator() else "edges"
     if backend == "dense":
+        if detect_deadlock:
+            raise ValueError("detect_deadlock is not supported by 'dense'")
         # float32 squaring can't resolve below ~1e-4 relative; honor a
         # caller-requested looser tolerance but clamp tighter requests
         return _mcr_batch_dense(
             stack, max_steps=max_steps, rel_tol=max(rel_tol, 1e-4), lo0=lo0
+        )
+    if backend == "csr-jit":
+        return _mcr_batch_csr(
+            stack, max_steps=max_steps, rel_tol=rel_tol, lo0=lo0,
+            detect_deadlock=detect_deadlock,
         )
     assert backend == "edges", backend
 
@@ -503,9 +518,16 @@ def mcr_batch(
     upper = _upper_path_bound(stack, order, uniq_keys, seg_starts)
     lo, hi, has_cycle = _bisection_bounds(stack, upper, lo0)
 
+    deadlocked = np.zeros(b, dtype=bool)
+    if detect_deadlock:
+        deadlocked = _positive_cycle_masks(
+            stack, hi, src_ord, w_ord, t_ord, row_ord, key_row,
+            uniq_keys, seg_starts, upper, None,
+        )
+
     for _ in range(max_steps):
         tol = rel_tol * np.maximum(1.0, np.abs(hi))
-        active = (hi - lo) > tol
+        active = ((hi - lo) > tol) & ~deadlocked
         if not active.any():
             break
         mid = np.where(active, 0.5 * (lo + hi), lo)
@@ -518,7 +540,117 @@ def mcr_batch(
         hi = np.where(active & ~pos, mid, hi)
     # rows that never showed a positive cycle at any probed lambda (and have
     # no self-loop cycle) are acyclic: no cycle bounds their throughput
-    return np.where(has_cycle, 0.5 * (lo + hi), NEG_INF)
+    res = np.where(has_cycle, 0.5 * (lo + hi), NEG_INF)
+    return np.where(deadlocked, np.inf, res) if detect_deadlock else res
+
+
+def _mcr_batch_csr(
+    stack: EdgeStack,
+    *,
+    max_steps: int = 80,
+    rel_tol: float = 1e-8,
+    lo0: Optional[np.ndarray] = None,
+    detect_deadlock: bool = False,
+    k_probes: Optional[int] = None,
+) -> np.ndarray:
+    """Device-resident exact lambda-search (the ``"csr-jit"`` backend).
+
+    Same flat batched CSR packing and path bounds as the ``"edges"`` path,
+    but the entire bisection — multi-lambda probes, Bellman-Ford
+    relaxation rounds, interval updates — runs inside one jitted float64
+    program (:func:`repro.kernels.maxplus_bellman.csr_bisect`): zero
+    host/device round-trips per probe, and every relaxation sweep shrinks
+    the interval ``(K+1)x``.  Exact to the same ``rel_tol`` contract as
+    ``"edges"``; the two agree to bisection-interval width on every row.
+    """
+    from repro.kernels import maxplus_bellman as kbell
+
+    b, n, e = stack.n_graphs, stack.n_actors, stack.n_edges
+    if e == 0:
+        return np.full(b, NEG_INF)
+    if k_probes is None:
+        k_probes = kbell.DEFAULT_K_PROBES
+
+    rows = np.arange(b, dtype=np.int64)[:, None]
+    flat_src = (rows * n + stack.src).ravel()
+    flat_dst = (rows * n + stack.dst).ravel()
+    # drop -inf padding slots before building the device layout: they all
+    # target actor 0 of their row (EdgeStack zero-fills indices), so keeping
+    # them would blow the ELL width up to the padding count; the neutral
+    # element contributes nothing anyway
+    keep = np.isfinite(stack.weights.ravel())
+    flat_src = flat_src[keep]
+    flat_dst = flat_dst[keep]
+    w_flat = stack.weights.ravel()[keep]
+    t_flat = stack.tokens.ravel()[keep].astype(np.float64)
+    row_flat = np.repeat(np.arange(b, dtype=np.int64), keep.reshape(b, e).sum(axis=1))
+    if flat_dst.size == 0:
+        return np.full(b, NEG_INF)
+    order = np.argsort(flat_dst, kind="stable")
+    uniq_keys, seg_starts = np.unique(flat_dst[order], return_index=True)
+    src_ord = flat_src[order]
+    dst_ord = flat_dst[order]
+    w_ord = w_flat[order]
+    t_ord = t_flat[order]
+
+    # per-row simple-path bound (same construction as _upper_path_bound,
+    # over the filtered edge set — identical values, pads are -inf)
+    max_in = np.full(b * n, NEG_INF)
+    max_in[uniq_keys] = np.maximum.reduceat(w_ord, seg_starts)
+    upper = np.clip(max_in.reshape(b, n), 0.0, None).sum(axis=1)
+    lo, hi, has_cycle = _bisection_bounds(stack, upper, lo0)
+
+    from repro.kernels.ops import _on_tpu as _kernels_on_tpu
+
+    if _kernels_on_tpu():
+        operands = (src_ord, dst_ord, w_ord, t_ord, row_flat[order])
+        layout = "segment-pallas"
+    else:
+        operands = _ell_pack(
+            src_ord, dst_ord, w_ord, t_ord, b * n, uniq_keys, seg_starts
+        )
+        layout = "ell"
+
+    # multi-probe steps shrink the interval (k+1)x per sweep, so the
+    # classic bisection budget over-covers by the same log factor
+    steps = max(4, int(math.ceil(max_steps / math.log2(k_probes + 1))) + 1)
+    lo, hi, has_cycle, deadlocked = kbell.mcr_bisect_device(
+        operands, lo, hi, has_cycle,
+        n_actors=n, rel_tol=rel_tol, k_probes=k_probes, max_steps=steps,
+        detect_deadlock=detect_deadlock, layout=layout,
+    )
+    res = np.where(has_cycle, 0.5 * (lo + hi), NEG_INF)
+    return np.where(deadlocked, np.inf, res) if detect_deadlock else res
+
+
+def _ell_pack(
+    src_ord: np.ndarray,
+    dst_ord: np.ndarray,
+    w_ord: np.ndarray,
+    t_ord: np.ndarray,
+    n_keys: int,
+    uniq_keys: np.ndarray,
+    seg_starts: np.ndarray,
+) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """dst-sorted flat edges -> ELLPACK ``(B*n, d_max)`` incoming-edge rows.
+
+    Pad slots point at node 0 with -inf weight (the (max,+) neutral), so
+    the degree-axis max ignores them.  ``d_max`` is rounded up to the next
+    power of two: the device program's shapes then only change when the
+    in-degree profile crosses a bucket, not on every edge-count wiggle.
+    """
+    counts = np.diff(np.append(seg_starts, src_ord.size))
+    d_max = int(counts.max(initial=1))
+    d_max = 1 << (d_max - 1).bit_length()
+    pos = np.arange(src_ord.size) - np.repeat(seg_starts, counts)
+    row_idx = dst_ord
+    ell_src = np.zeros((n_keys, d_max), dtype=np.int32)
+    ell_w = np.full((n_keys, d_max), NEG_INF)
+    ell_t = np.zeros((n_keys, d_max))
+    ell_src[row_idx, pos] = src_ord
+    ell_w[row_idx, pos] = w_ord
+    ell_t[row_idx, pos] = t_ord
+    return ell_src, ell_w, ell_t
 
 
 def _on_tpu() -> bool:
@@ -529,6 +661,48 @@ def _on_tpu() -> bool:
         return kernels_on_tpu()
     except Exception:  # pragma: no cover - jax is a hard dep in practice
         return False
+
+
+def _on_accelerator() -> bool:
+    # lazy for the same reason; any non-CPU jax device (TPU *or* GPU)
+    try:
+        from repro.kernels.ops import _on_accelerator as kernels_on_accel
+
+        return kernels_on_accel()
+    except Exception:  # pragma: no cover - jax is a hard dep in practice
+        return False
+
+
+#: squaring rounds the last :func:`_mcr_batch_dense` call actually ran,
+#: one entry per bisection step (instrumentation for tests/benchmarks).
+#: With PR-3 path-doubling shortcut edges in the stack
+#: (:func:`~repro.core.engine.stack_hardware_aware` with
+#: ``relax_shortcuts=True``) the value fixpoint arrives after about
+#: log2(shortcut-reduced hop diameter) rounds — the log2(n) bound is
+#: only the sound worst-case cap.
+_DENSE_LAST_ROUNDS: list[int] = []
+
+
+def _maxplus_fixpoint(a: np.ndarray, b: np.ndarray) -> bool:
+    """True when one more max-plus squaring left the closure unchanged.
+
+    Supports must match exactly; finite entries may drift by float32
+    re-association slack (the max of the SAME path weights summed in a
+    different association order), so they compare under a relative
+    tolerance two decades tighter than the dense backend's 1e-4 growth
+    threshold.  A positive cycle above that threshold keeps pumping the
+    on-cycle entries geometrically (budget doubles each squaring), so it
+    can never masquerade as a fixpoint.
+    """
+    fa, fb = np.isfinite(a), np.isfinite(b)
+    if not np.array_equal(fa, fb):
+        return False
+    av, bv = a[fa], b[fa]
+    if av.size == 0:
+        return True
+    return bool(
+        (np.abs(av - bv) <= 1e-6 * np.maximum(1.0, np.abs(bv))).all()
+    )
 
 
 def _mcr_batch_dense(
@@ -546,6 +720,21 @@ def _mcr_batch_dense(
     of length <= 2^k.  With ``2^k >= n_actors`` the paths saturate unless a
     positive cycle keeps pumping — one extra relaxation detects growth.
     float32 on the kernel path, so tolerances are looser than ``"edges"``.
+
+    The squaring count is NOT fixed at log2(n): that is only the cap.
+    Each bisection step squares until the closure stops changing
+    (:func:`_maxplus_fixpoint`), which it does once ``2^k`` covers the
+    graph's hop diameter.  Stacks built by
+    :func:`~repro.core.engine.stack_hardware_aware` with
+    ``relax_shortcuts=True`` carry the PR-3 order-cycle path-doubling
+    shortcut edges, which collapse the length-k TDMA order cycles — the
+    hop diameter of the hardware-aware graph — to O(log k) hops, so the
+    fixpoint lands after ~log2(shortcut-reduced diameter) rounds instead
+    of log2(n).  Saturation implies no positive cycle above the growth
+    threshold (a positive cycle doubles its pumping budget every
+    squaring, growing geometrically), so the early exit never flips the
+    per-step verdict.  Realized round counts land in
+    :data:`_DENSE_LAST_ROUNDS` for tests and benchmarks.
     """
     from repro.kernels import ops as kops
 
@@ -562,7 +751,8 @@ def _mcr_batch_dense(
     order = np.argsort(flat, kind="stable")
     uniq_keys, seg_starts = np.unique(flat[order], return_index=True)
     diag = np.arange(n)
-    n_sq = max(1, int(math.ceil(math.log2(max(n, 2)))))
+    n_sq_cap = max(1, int(math.ceil(math.log2(max(n, 2)))))
+    _DENSE_LAST_ROUNDS.clear()
 
     for _ in range(max_steps):
         tol = rel_tol * np.maximum(1.0, np.abs(hi))
@@ -579,8 +769,15 @@ def _mcr_batch_dense(
         w_dense[:, diag, diag] = np.maximum(w_dense[:, diag, diag], 0.0)
 
         m_pow = w_dense
-        for _ in range(n_sq):
-            m_pow = np.asarray(kops.maxplus_bmm(m_pow, m_pow))
+        rounds = 0
+        for _ in range(n_sq_cap):
+            m_new = np.asarray(kops.maxplus_bmm(m_pow, m_pow))
+            rounds += 1
+            saturated = _maxplus_fixpoint(m_new, m_pow)
+            m_pow = m_new
+            if saturated:
+                break
+        _DENSE_LAST_ROUNDS.append(rounds)
         dist = m_pow.max(axis=2)                       # paths from 0-vector
         dist1 = (w_dense + dist[:, None, :]).max(axis=2)
         growth = np.maximum(1.0, np.abs(dist)) * 1e-4

@@ -67,7 +67,12 @@ from .binding import (
     bind_spinemap,
     lpt_assign,
 )
-from .engine import batch_execute, project_order_batch
+from .engine import (
+    batch_execute,
+    batch_execute_fused,
+    prepare_execution,
+    project_order_batch,
+)
 from .hardware import ChipState, HardwareConfig
 from .partition import ClusteredSNN
 from .runtime import single_tile_order
@@ -337,6 +342,280 @@ def _epsilon_front(
 _OBJECTIVES = ("period", "energy", "pareto")
 
 
+class _BindingSearch:
+    """Stepwise engine of :func:`optimize_binding_graph` (ask/tell form).
+
+    Holds the whole evolutionary state — population, elite archive, rng
+    stream, history — and exposes it one *scoring request* at a time:
+    :meth:`ask` returns the next (pop, rel_tol) batch to score,
+    :meth:`tell` consumes the scores and breeds the next generation (or
+    finalizes).  Driven by :func:`optimize_binding_graph` one search at a
+    time, or by :func:`optimize_binding_graphs_fused` with MANY searches
+    in lockstep so each tick's scoring requests fuse into a single
+    analysis call.  The rng draw order and scoring batch contents are
+    bit-for-bit those of the original inline loop, so a single-search
+    drive reproduces :func:`optimize_binding_graph` exactly.
+    """
+
+    def __init__(
+        self,
+        app: SDFG,
+        hw: HardwareConfig,
+        single_order: Sequence[int],
+        *,
+        seed_bindings: dict[str, np.ndarray],
+        channel_src: Optional[np.ndarray] = None,
+        channel_dst: Optional[np.ndarray] = None,
+        channel_rate: Optional[np.ndarray] = None,
+        population: int = 64,
+        generations: int = 8,
+        elite: int = 8,
+        rng_seed: int = 0,
+        allowed_tiles: Optional[Sequence[int]] = None,
+        objective: str = "period",
+        period_floor: float = float("-inf"),
+        score_rel_tol: float = 1e-4,
+        final_rel_tol: float = 1e-8,
+        chip_state: Optional[ChipState] = None,
+        rate_scale=None,
+    ):
+        _validate_budget(population, generations, objective)
+        self.app, self.hw = app, hw
+        self.population, self.generations = population, generations
+        self.elite = min(max(1, elite), population)
+        self.rng_seed, self.objective = rng_seed, objective
+        self.period_floor = period_floor
+        self.score_rel_tol, self.final_rel_tol = score_rel_tol, final_rel_tol
+        self.chip_state, self.rate_scale = chip_state, rate_scale
+        n, n_tiles = app.n_actors, hw.n_tiles
+        self.tiles = tiles = (
+            np.arange(n_tiles, dtype=np.int64) if allowed_tiles is None
+            else np.asarray(sorted(allowed_tiles), dtype=np.int64)
+        )
+        assert tiles.size >= 1 and tiles.min() >= 0 and tiles.max() < n_tiles, (
+            f"allowed_tiles must be distinct ids in [0, {n_tiles}), got {tiles}"
+        )
+        assert seed_bindings, "need at least one seed binding"
+        self.t0 = time.perf_counter()
+        self.rng = rng = np.random.default_rng(rng_seed)
+        self.single_order = list(single_order)
+        self.ch_src = np.asarray(
+            channel_src if channel_src is not None else [], dtype=np.int64
+        )
+        self.ch_dst = np.asarray(
+            channel_dst if channel_dst is not None else [], dtype=np.int64
+        )
+        self.ch_rate = np.asarray(
+            channel_rate if channel_rate is not None else [], dtype=np.float64
+        )
+        self.seed_bindings = seed_bindings
+        for name, b in seed_bindings.items():
+            assert np.isin(b, tiles).all(), (
+                f"seed {name!r} uses tiles outside the allowed set"
+            )
+        self.seed_mat = seed_mat = np.stack(
+            [np.asarray(b, dtype=np.int64) for b in seed_bindings.values()]
+        )
+
+        # -- generation 0: seeds + LPT start + mutated seeds + immigrants
+        # tau-LPT balances serialized compute directly — a strong start
+        # the Eq.-7 binders don't produce (their load mixes buffer/
+        # bandwidth terms)
+        tau_lpt = tiles[lpt_assign(app.exec_time, int(tiles.size))]
+        starts = _dedup_rows(np.concatenate([seed_mat, tau_lpt[None, :]]))
+        pop = np.empty((population, n), dtype=np.int64)
+        n_start = min(starts.shape[0], population)
+        pop[:n_start] = starts[:n_start]
+        n_rand = max(0, (population - n_start) // 8)
+        fill = population - n_start - n_rand
+        if fill > 0:
+            children = starts[
+                rng.integers(0, starts.shape[0], size=fill)
+            ].copy()
+            half = fill // 2
+            if half:
+                blk = children[:half]
+                _guided_mutate(blk, app.exec_time, n_tiles, tiles, rng)
+                children[:half] = blk
+            blk = children[half:]
+            _mutate(blk, rng, tiles, swaps=1, moves=1)
+            children[half:] = blk
+            pop[n_start : n_start + fill] = children
+        if n_rand > 0:
+            pop[population - n_rand :] = tiles[
+                rng.integers(0, tiles.size, size=(n_rand, n))
+            ]
+        self.pop = pop
+
+        self.history: list[GenerationStat] = []
+        # best-ever rows; re-ranked exactly at the end
+        self.archive = seed_mat.copy()
+        self.n_builds = 0
+        self.gen = 0
+        self.final_pool: Optional[np.ndarray] = None
+        self._report: Optional[OptimizeReport] = None
+        self._t_gen = 0.0
+
+    @property
+    def done(self) -> bool:
+        """True once :meth:`report` is available."""
+        return self._report is not None
+
+    def ask(self) -> tuple[np.ndarray, float]:
+        """The next binding batch to score and its period tolerance."""
+        assert not self.done, "search already finalized"
+        if self.final_pool is not None:
+            return self.final_pool, self.final_rel_tol
+        self._t_gen = time.perf_counter()
+        return self.pop, self.score_rel_tol
+
+    def tell(self, periods: np.ndarray, energies: np.ndarray) -> None:
+        """Consume the scores of the last :meth:`ask` batch."""
+        assert not self.done, "search already finalized"
+        self.n_builds += 1
+        if self.final_pool is not None:
+            self._finalize(periods, energies)
+            return
+        pop, rng, elite = self.pop, self.rng, self.elite
+        population, n = self.population, self.app.n_actors
+        # breeding elites: ranked by energy for the energy objective,
+        # by period otherwise — the pareto trajectory is bit-for-bit the
+        # period trajectory (same elites, same rng stream); what differs
+        # is the archive below.  A finite period_floor clamps the ranking
+        # key (chip-wide, sub-floor periods are equivalent); the -inf
+        # default leaves the ranking bit-for-bit unchanged.
+        key = (
+            energies if self.objective == "energy"
+            else np.maximum(periods, self.period_floor)
+        )
+        rank = np.argsort(key, kind="stable")
+        elites = pop[rank[:elite]]
+
+        # fold this generation's elites into the best-ever archive; the
+        # pareto objective additionally keeps the epsilon-non-dominated
+        # rows, so minimum-energy and knee candidates survive into the
+        # final exact re-score alongside the period-only elites
+        self.archive = _dedup_rows(np.concatenate([self.archive, elites]))
+        if self.objective == "pareto":
+            front_rows = pop[_epsilon_front(periods, energies)]
+            self.archive = _dedup_rows(
+                np.concatenate([self.archive, front_rows])
+            )
+        finite_p = np.isfinite(periods)
+        finite_e = np.isfinite(energies)
+        self.history.append(GenerationStat(
+            generation=self.gen,
+            best_period=float(periods.min()),
+            mean_period=float(np.mean(periods[finite_p])) if finite_p.any()
+            else float("inf"),
+            wall_s=time.perf_counter() - self._t_gen,
+            best_energy=float(energies.min()),
+            mean_energy=float(np.mean(energies[finite_e])) if finite_e.any()
+            else float("inf"),
+        ))
+
+        if self.gen == self.generations - 1:
+            # -- final exact re-score pool: archive U seeds ------------
+            self.final_pool = _dedup_rows(
+                np.concatenate([self.seed_mat, self.archive])
+            )
+            return
+        # -- next generation: elitism + crossover + guided/comm/blind
+        nxt = np.empty_like(pop)
+        nxt[:elite] = elites
+        n_children = population - elite
+        pa = elites[rng.integers(0, elite, size=n_children)]
+        pb = elites[rng.integers(0, elite, size=n_children)]
+        cross = rng.random((n_children, n)) < 0.5
+        children = np.where(cross, pa, pb)
+        # children split three ways: climb the bottleneck tile (guided
+        # compute), co-locate the heaviest cut channel (guided comm — the
+        # NoC-bound operating points AND the dominant chip-energy term),
+        # or explore blindly; a heavy-mutation slice keeps diversity up
+        u = rng.random(n_children)
+        guided = u < 0.4
+        comm = (u >= 0.4) & (u < 0.6)
+        if guided.any():
+            block = children[guided]
+            _guided_mutate(
+                block, self.app.exec_time, self.hw.n_tiles, self.tiles, rng
+            )
+            children[guided] = block
+        if comm.any():
+            block = children[comm]
+            _comm_guided_mutate(
+                block, self.ch_src, self.ch_dst, self.ch_rate, self.hw, rng
+            )
+            children[comm] = block
+        blind = u >= 0.6
+        if blind.any():
+            block = children[blind]
+            _mutate(block, rng, self.tiles, swaps=1, moves=1)
+            children[blind] = block
+        heavy = rng.random(n_children) < 0.2
+        if heavy.any():
+            block = children[heavy]
+            _mutate(block, rng, self.tiles, swaps=2, moves=2)
+            children[heavy] = block
+        nxt[elite:] = children
+        self.pop = nxt
+        self.gen += 1
+
+    def _finalize(
+        self, final_periods: np.ndarray, final_energies: np.ndarray
+    ) -> None:
+        final_pool = self.final_pool
+        if self.objective == "energy":
+            best_row = int(np.argmin(final_energies))
+        elif np.isfinite(self.period_floor):
+            # chip-wide ranking: clamp at the rest-of-chip floor, break
+            # the (common) floor ties toward lower chip energy, then
+            # pool order
+            clamped = np.maximum(final_periods, self.period_floor)
+            best_row = int(np.lexsort((final_energies, clamped))[0])
+        else:
+            best_row = int(np.argmin(final_periods))
+        front = [
+            ParetoPoint(
+                binding=final_pool[i].copy(),
+                period=float(final_periods[i]),
+                energy=float(final_energies[i]),
+            )
+            for i in _epsilon_front(final_periods, final_energies, eps=0.0)
+        ]
+
+        # seed scores from the same exact batch (rows 0..n_seeds-1 of
+        # the deduped pool ARE the seeds, first occurrence kept)
+        seed_periods: dict[str, float] = {}
+        seed_energies: dict[str, float] = {}
+        pool_index = {row.tobytes(): r for r, row in enumerate(final_pool)}
+        for name, b in self.seed_bindings.items():
+            r = pool_index[np.asarray(b, dtype=np.int64).tobytes()]
+            seed_periods[name] = float(final_periods[r])
+            seed_energies[name] = float(final_energies[r])
+
+        self._report = OptimizeReport(
+            binding=final_pool[best_row].copy(),
+            period=float(final_periods[best_row]),
+            seed_periods=seed_periods,
+            history=self.history,
+            n_stack_builds=self.n_builds,
+            opt_time_s=time.perf_counter() - self.t0,
+            population=self.population,
+            generations=self.generations,
+            rng_seed=self.rng_seed,
+            objective=self.objective,
+            energy=float(final_energies[best_row]),
+            seed_energies=seed_energies,
+            front=front,
+        )
+
+    def report(self) -> OptimizeReport:
+        """The finished search's report (only valid once :attr:`done`)."""
+        assert self._report is not None, "search not finished"
+        return self._report
+
+
 def _validate_budget(population: int, generations: int, objective: str) -> None:
     """Raise ValueError on an unusable search budget or unknown objective."""
     if population < 2 or generations < 1:
@@ -415,207 +694,99 @@ def optimize_binding_graph(
     degraded chip should pass alive-only ``allowed_tiles`` (and repaired
     seeds) so the search budget is not wasted on infeasible rows.
     """
-    _validate_budget(population, generations, objective)
-    elite = min(max(1, elite), population)
-    n, n_tiles = app.n_actors, hw.n_tiles
-    tiles = (
-        np.arange(n_tiles, dtype=np.int64) if allowed_tiles is None
-        else np.asarray(sorted(allowed_tiles), dtype=np.int64)
+    search = _BindingSearch(
+        app, hw, single_order,
+        seed_bindings=seed_bindings,
+        channel_src=channel_src, channel_dst=channel_dst,
+        channel_rate=channel_rate,
+        population=population, generations=generations, elite=elite,
+        rng_seed=rng_seed, allowed_tiles=allowed_tiles,
+        objective=objective, period_floor=period_floor,
+        score_rel_tol=score_rel_tol, final_rel_tol=final_rel_tol,
+        chip_state=chip_state, rate_scale=rate_scale,
     )
-    assert tiles.size >= 1 and tiles.min() >= 0 and tiles.max() < n_tiles, (
-        f"allowed_tiles must be distinct ids in [0, {n_tiles}), got {tiles}"
-    )
-    assert seed_bindings, "need at least one seed binding"
-    t0 = time.perf_counter()
-    rng = np.random.default_rng(rng_seed)
-    single_order = list(single_order)
-    ch_src = np.asarray(
-        channel_src if channel_src is not None else [], dtype=np.int64
-    )
-    ch_dst = np.asarray(
-        channel_dst if channel_dst is not None else [], dtype=np.int64
-    )
-    ch_rate = np.asarray(
-        channel_rate if channel_rate is not None else [], dtype=np.float64
-    )
-    for name, b in seed_bindings.items():
-        assert np.isin(b, tiles).all(), (
-            f"seed {name!r} uses tiles outside the allowed set"
-        )
-    seed_mat = np.stack(
-        [np.asarray(b, dtype=np.int64) for b in seed_bindings.values()]
-    )
-
-    def score(pop: np.ndarray, rel_tol: float) -> tuple[np.ndarray, np.ndarray]:
+    while not search.done:
         # one vectorized Lemma-1 projection for the whole population: the
         # engine consumes the OrderBatch directly, so no per-candidate
         # Python runs between proposal and scoring (and the stacked shape
         # is generation-invariant — every scoring call is a compile-cache
         # hit after the first).  Energies ride the same stack build.
+        pop, rel_tol = search.ask()
         orders = project_order_batch(single_order, pop)
         rep = batch_execute(
             app, pop, hw, orders, backend=backend, rel_tol=rel_tol,
             with_energy=True, chip_state=chip_state, rate_scale=rate_scale,
         )
-        # dead/acyclic rows (cannot happen for live apps, but stay safe)
-        alive = np.isfinite(rep.periods) & (rep.periods > 0)
-        return (
-            np.where(alive, rep.periods, np.inf),
-            np.where(alive, rep.energies, np.inf),
-        )
+        search.tell(*_alive_scores(rep))
+    return search.report()
 
-    # -- generation 0: seeds + LPT start + mutated seeds + immigrants ---
-    # tau-LPT balances serialized compute directly — a strong start the
-    # Eq.-7 binders don't produce (their load mixes buffer/bandwidth terms)
-    tau_lpt = tiles[lpt_assign(app.exec_time, int(tiles.size))]
-    starts = _dedup_rows(np.concatenate([seed_mat, tau_lpt[None, :]]))
-    pop = np.empty((population, n), dtype=np.int64)
-    n_start = min(starts.shape[0], population)
-    pop[:n_start] = starts[:n_start]
-    n_rand = max(0, (population - n_start) // 8)
-    fill = population - n_start - n_rand
-    if fill > 0:
-        children = starts[rng.integers(0, starts.shape[0], size=fill)].copy()
-        half = fill // 2
-        if half:
-            blk = children[:half]
-            _guided_mutate(blk, app.exec_time, n_tiles, tiles, rng)
-            children[:half] = blk
-        blk = children[half:]
-        _mutate(blk, rng, tiles, swaps=1, moves=1)
-        children[half:] = blk
-        pop[n_start : n_start + fill] = children
-    if n_rand > 0:
-        pop[population - n_rand :] = tiles[
-            rng.integers(0, tiles.size, size=(n_rand, n))
-        ]
 
-    history: list[GenerationStat] = []
-    archive = seed_mat.copy()    # best-ever rows; re-ranked exactly at the end
-    n_builds = 0
-    for gen in range(generations):
-        t_gen = time.perf_counter()
-        periods, energies = score(pop, score_rel_tol)
-        n_builds += 1
-        # breeding elites: ranked by energy for the energy objective,
-        # by period otherwise — the pareto trajectory is bit-for-bit the
-        # period trajectory (same elites, same rng stream); what differs
-        # is the archive below.  A finite period_floor clamps the ranking
-        # key (chip-wide, sub-floor periods are equivalent); the -inf
-        # default leaves the ranking bit-for-bit unchanged.
-        key = (
-            energies if objective == "energy"
-            else np.maximum(periods, period_floor)
-        )
-        rank = np.argsort(key, kind="stable")
-        elites = pop[rank[:elite]]
-
-        # fold this generation's elites into the best-ever archive; the
-        # pareto objective additionally keeps the epsilon-non-dominated
-        # rows, so minimum-energy and knee candidates survive into the
-        # final exact re-score alongside the period-only elites
-        archive = _dedup_rows(np.concatenate([archive, elites]))
-        if objective == "pareto":
-            front_rows = pop[_epsilon_front(periods, energies)]
-            archive = _dedup_rows(np.concatenate([archive, front_rows]))
-        finite_p = np.isfinite(periods)
-        finite_e = np.isfinite(energies)
-        history.append(GenerationStat(
-            generation=gen,
-            best_period=float(periods.min()),
-            mean_period=float(np.mean(periods[finite_p])) if finite_p.any()
-            else float("inf"),
-            wall_s=time.perf_counter() - t_gen,
-            best_energy=float(energies.min()),
-            mean_energy=float(np.mean(energies[finite_e])) if finite_e.any()
-            else float("inf"),
-        ))
-
-        if gen == generations - 1:
-            break
-        # -- next generation: elitism + crossover + guided/comm/blind
-        nxt = np.empty_like(pop)
-        nxt[:elite] = elites
-        n_children = population - elite
-        pa = elites[rng.integers(0, elite, size=n_children)]
-        pb = elites[rng.integers(0, elite, size=n_children)]
-        cross = rng.random((n_children, n)) < 0.5
-        children = np.where(cross, pa, pb)
-        # children split three ways: climb the bottleneck tile (guided
-        # compute), co-locate the heaviest cut channel (guided comm — the
-        # NoC-bound operating points AND the dominant chip-energy term),
-        # or explore blindly; a heavy-mutation slice keeps diversity up
-        u = rng.random(n_children)
-        guided = u < 0.4
-        comm = (u >= 0.4) & (u < 0.6)
-        if guided.any():
-            block = children[guided]
-            _guided_mutate(block, app.exec_time, n_tiles, tiles, rng)
-            children[guided] = block
-        if comm.any():
-            block = children[comm]
-            _comm_guided_mutate(block, ch_src, ch_dst, ch_rate, hw, rng)
-            children[comm] = block
-        blind = u >= 0.6
-        if blind.any():
-            block = children[blind]
-            _mutate(block, rng, tiles, swaps=1, moves=1)
-            children[blind] = block
-        heavy = rng.random(n_children) < 0.2
-        if heavy.any():
-            block = children[heavy]
-            _mutate(block, rng, tiles, swaps=2, moves=2)
-            children[heavy] = block
-        nxt[elite:] = children
-        pop = nxt
-
-    # -- final exact re-score: archive U seeds, one batched call --------
-    final_pool = _dedup_rows(np.concatenate([seed_mat, archive]))
-    final_periods, final_energies = score(final_pool, final_rel_tol)
-    n_builds += 1
-    if objective == "energy":
-        best_row = int(np.argmin(final_energies))
-    elif np.isfinite(period_floor):
-        # chip-wide ranking: clamp at the rest-of-chip floor, break the
-        # (common) floor ties toward lower chip energy, then pool order
-        clamped = np.maximum(final_periods, period_floor)
-        best_row = int(np.lexsort((final_energies, clamped))[0])
-    else:
-        best_row = int(np.argmin(final_periods))
-    front = [
-        ParetoPoint(
-            binding=final_pool[i].copy(),
-            period=float(final_periods[i]),
-            energy=float(final_energies[i]),
-        )
-        for i in _epsilon_front(final_periods, final_energies, eps=0.0)
-    ]
-
-    # seed scores from the same exact batch (rows 0..n_seeds-1 of the
-    # deduped pool ARE the seeds, first occurrence kept)
-    seed_periods: dict[str, float] = {}
-    seed_energies: dict[str, float] = {}
-    pool_index = {row.tobytes(): r for r, row in enumerate(final_pool)}
-    for name, b in seed_bindings.items():
-        r = pool_index[np.asarray(b, dtype=np.int64).tobytes()]
-        seed_periods[name] = float(final_periods[r])
-        seed_energies[name] = float(final_energies[r])
-
-    return OptimizeReport(
-        binding=final_pool[best_row].copy(),
-        period=float(final_periods[best_row]),
-        seed_periods=seed_periods,
-        history=history,
-        n_stack_builds=n_builds,
-        opt_time_s=time.perf_counter() - t0,
-        population=population,
-        generations=generations,
-        rng_seed=rng_seed,
-        objective=objective,
-        energy=float(final_energies[best_row]),
-        seed_energies=seed_energies,
-        front=front,
+def _alive_scores(rep) -> tuple[np.ndarray, np.ndarray]:
+    """Mask dead/acyclic rows (cannot happen for live apps, but stay safe)."""
+    alive = np.isfinite(rep.periods) & (rep.periods > 0)
+    return (
+        np.where(alive, rep.periods, np.inf),
+        np.where(alive, rep.energies, np.inf),
     )
+
+
+def optimize_binding_graphs_fused(
+    tasks: Sequence[dict],
+    *,
+    backend: str = "auto",
+) -> list[OptimizeReport]:
+    """Run MANY independent binding searches with FUSED scoring.
+
+    ``tasks`` is a sequence of keyword dicts, each exactly the signature
+    of :func:`optimize_binding_graph` minus ``backend`` (positional
+    ``app``/``hw``/``single_order`` under those keys).  The searches run
+    their generations in lockstep: every tick gathers one scoring batch
+    per unfinished search, builds each batch's EdgeStack independently
+    (:func:`~repro.core.engine.prepare_execution`), and solves them all
+    in ONE fused :func:`~repro.core.engine.batch_execute_fused` call —
+    device dispatch and compile-cache entry are paid once per tick
+    instead of once per region component per generation.  Each search's
+    rng stream, scoring batches, and ranking are bit-for-bit those of
+    its standalone :func:`optimize_binding_graph` run; only the analysis
+    tolerance can be TIGHTER (the fused solve takes the min over its
+    members).  Requests are fused per (tick, tolerance) group — mixing
+    tolerances would solve some members TIGHTER than their standalone
+    run and could reorder near-tie elites, breaking reproducibility —
+    so a tick where every search is in the same phase (the common case:
+    equal generation counts) is exactly one call.  Reports come back in
+    task order.
+    """
+    searches = [
+        _BindingSearch(
+            t["app"], t["hw"], t["single_order"],
+            **{
+                k: v for k, v in t.items()
+                if k not in ("app", "hw", "single_order")
+            },
+        )
+        for t in tasks
+    ]
+    while True:
+        live = [s for s in searches if not s.done]
+        if not live:
+            break
+        groups: dict[float, tuple[list[_BindingSearch], list]] = {}
+        for s in live:
+            pop, rel_tol = s.ask()
+            orders = project_order_batch(s.single_order, pop)
+            prep = prepare_execution(
+                s.app, pop, s.hw, orders, rel_tol=rel_tol,
+                with_energy=True, chip_state=s.chip_state,
+                rate_scale=s.rate_scale,
+            )
+            groups.setdefault(rel_tol, ([], []))
+            groups[rel_tol][0].append(s)
+            groups[rel_tol][1].append(prep)
+        for rel_tol, (members, preps) in groups.items():
+            reports = batch_execute_fused(preps, backend=backend)
+            for s, rep in zip(members, reports):
+                s.tell(*_alive_scores(rep))
+    return [s.report() for s in searches]
 
 
 def optimize_binding(

@@ -536,6 +536,7 @@ class AdmissionController:
         region_max_apps: int = 6,
         full_rebalance_every: int = 8,
         region_radius: int = 1,
+        fused_scoring: bool = True,
     ):
         if placement not in ("isolated", "joint"):
             raise ValueError(
@@ -578,6 +579,17 @@ class AdmissionController:
         self.region_max_apps = int(region_max_apps)
         self.full_rebalance_every = int(full_rebalance_every)
         self.region_radius = int(region_radius)
+        # fused cross-component scoring: a multi-component region runs
+        # its component searches in lockstep, one fused EdgeStack
+        # analysis per generation (see _optimize_region)
+        self.fused_scoring = bool(fused_scoring)
+        # rebalance deferral (the serving burst path): while a deferral
+        # is active, _rebalance only records the event; flush_rebalances
+        # merges all pending events into ONE region rebalance
+        self._defer_rebalance = False
+        self._pending_event_apps: set[str] = set()
+        self._pending_freed: set[int] = set()
+        self._deferred_events = 0
         # per-app binding epochs key the component-metric cache: any write
         # to an app's binding invalidates exactly the components it touches
         self._binding_epoch: dict[str, int] = {}
@@ -1294,10 +1306,64 @@ class AdmissionController:
         else:
             self._app_rate_snapshot = {}
 
+    def defer_rebalances(self):
+        """Context manager: coalesce rebalances for a burst of events.
+
+        While active, admits and evicts apply their placement changes
+        but skip the per-event joint rebalance — `_rebalance` only
+        records the event's (apps, freed tiles).  On exit (or an
+        explicit :meth:`flush_rebalances` inside the window) all pending
+        events merge into ONE rebalance whose affected region seeds from
+        every recorded app and freed tile at once — the serving loop's
+        batching lever: K churn events cost one region re-optimization
+        (with fused per-component scoring) instead of K.
+        """
+        import contextlib
+
+        @contextlib.contextmanager
+        def _guard():
+            self._defer_rebalance = True
+            try:
+                yield self
+            finally:
+                self._defer_rebalance = False
+                self.flush_rebalances()
+
+        return _guard()
+
+    def flush_rebalances(self) -> int:
+        """Run the single merged rebalance for all deferred events.
+
+        Returns the number of events coalesced into this flush (0 when
+        nothing is pending).  Safe to call mid-window: pending state is
+        consumed and the deferral stays active for subsequent events.
+        """
+        n = self._deferred_events
+        if n == 0:
+            return 0
+        event_apps = sorted(
+            a for a in self._pending_event_apps
+            if a in self.state.allocated
+        )
+        freed = sorted(self._pending_freed)
+        self._pending_event_apps.clear()
+        self._pending_freed.clear()
+        self._deferred_events = 0
+        was_deferred, self._defer_rebalance = self._defer_rebalance, False
+        try:
+            self._rebalance(
+                event_apps=event_apps or None,
+                freed_tiles=freed or None,
+            )
+        finally:
+            self._defer_rebalance = was_deferred
+        return n
+
     def _rebalance(
         self,
         *,
         event_app: Optional[str] = None,
+        event_apps: Optional[list[str]] = None,
         freed_tiles: Optional[list[int]] = None,
     ) -> None:
         """Re-place residents after an event (``placement="joint"``).
@@ -1314,6 +1380,16 @@ class AdmissionController:
         ``region_radius`` mesh hops of ``freed_tiles`` on evict, grown
         over component adjacency up to the cap.
         """
+        if self._defer_rebalance:
+            # burst window (defer_rebalances): record, rebalance later
+            if event_app is not None:
+                self._pending_event_apps.add(event_app)
+            self._pending_event_apps.update(event_apps or [])
+            self._pending_freed.update(
+                int(t) for t in (freed_tiles or [])
+            )
+            self._deferred_events += 1
+            return
         if len(self.state.allocated) < 2:
             return
         self._rebalance_count += 1
@@ -1326,7 +1402,9 @@ class AdmissionController:
         ):
             self._rebalance_full()
             return
-        event_apps = [event_app] if event_app is not None else []
+        event_apps = list(event_apps or [])
+        if event_app is not None and event_app not in event_apps:
+            event_apps.append(event_app)
         if self._pending_consolidation:
             # fold the deferred fault neighborhoods into this event's
             # region seed: consolidation rides a non-recovery event
@@ -1609,10 +1687,26 @@ class AdmissionController:
         self.events.append(event)
 
     def _optimize_region(self, names: list[str]) -> None:
-        """Sequentially optimize every tile-sharing component touching
-        ``names``, each against the floor set by everything else on the
-        chip (outside components AND the other region components' current
-        periods).  Shared by region rebalances and fault remaps."""
+        """Optimize every tile-sharing component touching ``names``, each
+        against the floor set by everything else on the chip (outside
+        components AND the other region components' periods).  Shared by
+        region rebalances and fault remaps.
+
+        With ``fused_scoring`` (the default) a multi-component region
+        runs all component searches in LOCKSTEP through
+        :func:`~repro.core.optimize.optimize_binding_graphs_fused`: one
+        fused EdgeStack analysis per optimizer generation for the whole
+        region instead of one per component per generation.  Floors are
+        taken from the PRE-event component periods — each is then at
+        most the pre-event chip period, so the never-regress argument is
+        unchanged (every search seeds from the current binding and ranks
+        on ``max(period, floor)``; the post-event chip period is at most
+        ``max_k max(seed_k, floor_k)`` = the pre-event chip period).
+        The free tiles offered to the sibling searches are PARTITIONED
+        up front (:meth:`_component_allowed` with a shrinking pool), so
+        two components can never claim the same free tile and the
+        no-merge invariant of sequential processing is preserved.
+        """
         region = set(names)
         comps = [
             sorted(c) for c in self._tile_components() if region & set(c)
@@ -1626,6 +1720,9 @@ class AdmissionController:
         comp_periods = [
             self._component_record(c)["period"] for c in comps
         ]
+        if len(comps) > 1 and self.fused_scoring:
+            self._optimize_components_fused(comps, out_periods, comp_periods)
+            return
         for k, comp in enumerate(comps):
             floor = max(
                 out_periods + comp_periods[:k] + comp_periods[k + 1:],
@@ -1633,7 +1730,101 @@ class AdmissionController:
             )
             comp_periods[k] = self._optimize_component(comp, floor)
 
-    def _component_allowed(self, names: list[str]) -> list[int]:
+    def _component_task(
+        self, comp: list[str], floor: float,
+        free_pool: Optional[list[int]] = None,
+    ) -> tuple[dict, tuple]:
+        """One component's fused-search task (kwargs for
+        :func:`~repro.core.optimize.optimize_binding_graphs_fused`) plus
+        the write-back context ``(names, order, offsets)``.  Mirrors
+        :meth:`_optimize_component`'s setup exactly."""
+        arts, union, order, binding, offsets = self._sub_union(comp)
+        allowed = self._component_allowed(comp, free_pool=free_pool)
+        binding = self._repair_binding(binding, allowed)
+        gens, pop = self.joint_budget
+        if len(comp) > self.region_max_apps:
+            gens = 1
+            pop = max(2, (pop * self.region_max_apps) // len(comp))
+        ch_src = np.concatenate([
+            a.clustered.channel_src + off
+            for a, off in zip(arts, offsets[:-1])
+        ])
+        ch_dst = np.concatenate([
+            a.clustered.channel_dst + off
+            for a, off in zip(arts, offsets[:-1])
+        ])
+        ch_rate = np.concatenate(
+            [a.clustered.channel_rate for a in arts]
+        )
+        task = dict(
+            app=union, hw=self.hw, single_order=order,
+            seed_bindings={"current": binding},
+            channel_src=ch_src, channel_dst=ch_dst, channel_rate=ch_rate,
+            population=pop, generations=gens, rng_seed=0,
+            allowed_tiles=allowed, objective=self.objective,
+            period_floor=floor,
+            chip_state=self.chip,
+            rate_scale=self._union_rate_scale(arts),
+        )
+        return task, (comp, order, offsets)
+
+    def _apply_component_result(
+        self, names: list[str], order, offsets, rep
+    ) -> None:
+        """Write one component's optimized binding back into the chip
+        state (allocations, per-app reports, binding epochs)."""
+        union_orders = project_order(order, rep.binding, self.hw.n_tiles)
+        for k, name in enumerate(names):
+            lo, hi = int(offsets[k]), int(offsets[k + 1])
+            b_app = rep.binding[lo:hi].copy()
+            self.state.allocated[name] = sorted(
+                {int(t) for t in b_app}
+            )
+            self.reports[name] = CompileReport(
+                app=name,
+                binding=b_app,
+                orders=[
+                    [a - lo for a in tile_order if lo <= a < hi]
+                    for tile_order in union_orders
+                ],
+                throughput=0.0,   # patched to the chip rate by the caller
+                bind_time_s=rep.opt_time_s / len(names),
+                schedule_time_s=0.0,
+            )
+            self._bump_epoch(name)
+
+    def _optimize_components_fused(
+        self,
+        comps: list[list[str]],
+        out_periods: list[float],
+        comp_periods: list[float],
+    ) -> None:
+        """Fused lockstep re-optimization of a region's components."""
+        from .optimize import optimize_binding_graphs_fused
+
+        tasks, contexts = [], []
+        free = self.state.free_tiles()
+        for k, comp in enumerate(comps):
+            floor = max(
+                out_periods + comp_periods[:k] + comp_periods[k + 1:],
+                default=float("-inf"),
+            )
+            task, ctx = self._component_task(comp, floor, free_pool=free)
+            # tiles offered to this component leave the sibling pool:
+            # siblings can never bind them, so components cannot merge
+            offered = set(task["allowed_tiles"])
+            free = [t for t in free if t not in offered]
+            tasks.append(task)
+            contexts.append(ctx)
+        with record_cache_stats(self.cache_stats):
+            reps = optimize_binding_graphs_fused(tasks)
+        for (comp, order, offsets), rep in zip(contexts, reps):
+            self._apply_component_result(comp, order, offsets, rep)
+
+    def _component_allowed(
+        self, names: list[str],
+        free_pool: Optional[list[int]] = None,
+    ) -> list[int]:
         """Candidate tiles of one component's region search (alive only).
 
         The component's own (alive) footprint plus the closest free tiles
@@ -1643,7 +1834,10 @@ class AdmissionController:
         excluded on both sides (``free_tiles`` masks them, the footprint
         is filtered here); a fully-dead footprint still anchors the
         distance ranking so replacement tiles stay near the component's
-        original location.  On a DEGRADED chip the free-tile pool is
+        original location.  ``free_pool`` overrides the live free-tile
+        set — the fused region path partitions one pool among sibling
+        components so their offered tiles never overlap.  On a DEGRADED
+        chip the free-tile pool is
         widened (2x the footprint instead of matching it): a drifted or
         throttled component recovers chip throughput by spreading over
         free tiles, and the region search can only use tiles it is
@@ -1656,7 +1850,11 @@ class AdmissionController:
         )
         alive_fp = [t for t in footprint if not self.chip.dead[t]]
         allowed = list(alive_fp)
-        free = np.asarray(self.state.free_tiles(), dtype=np.int64)
+        free = np.asarray(
+            self.state.free_tiles() if free_pool is None
+            else sorted(free_pool),
+            dtype=np.int64,
+        )
         if free.size and footprint:
             anchor = np.asarray(
                 alive_fp if alive_fp else footprint, dtype=np.int64
@@ -1719,54 +1917,13 @@ class AdmissionController:
         """
         from .optimize import optimize_binding_graph
 
-        arts, union, order, binding, offsets = self._sub_union(names)
-        allowed = self._component_allowed(names)
-        binding = self._repair_binding(binding, allowed)
-        gens, pop = self.joint_budget
-        if len(names) > self.region_max_apps:
-            gens = 1
-            pop = max(2, (pop * self.region_max_apps) // len(names))
-        ch_src = np.concatenate([
-            a.clustered.channel_src + off
-            for a, off in zip(arts, offsets[:-1])
-        ])
-        ch_dst = np.concatenate([
-            a.clustered.channel_dst + off
-            for a, off in zip(arts, offsets[:-1])
-        ])
-        ch_rate = np.concatenate(
-            [a.clustered.channel_rate for a in arts]
-        )
+        task, (_, order, offsets) = self._component_task(names, floor)
+        app = task.pop("app")
+        hw = task.pop("hw")
+        single_order = task.pop("single_order")
         with record_cache_stats(self.cache_stats):
-            rep = optimize_binding_graph(
-                union, self.hw, order,
-                seed_bindings={"current": binding},
-                channel_src=ch_src, channel_dst=ch_dst, channel_rate=ch_rate,
-                population=pop, generations=gens, rng_seed=0,
-                allowed_tiles=allowed, objective=self.objective,
-                period_floor=floor,
-                chip_state=self.chip,
-                rate_scale=self._union_rate_scale(arts),
-            )
-        union_orders = project_order(order, rep.binding, self.hw.n_tiles)
-        for k, name in enumerate(names):
-            lo, hi = int(offsets[k]), int(offsets[k + 1])
-            b_app = rep.binding[lo:hi].copy()
-            self.state.allocated[name] = sorted(
-                {int(t) for t in b_app}
-            )
-            self.reports[name] = CompileReport(
-                app=name,
-                binding=b_app,
-                orders=[
-                    [a - lo for a in tile_order if lo <= a < hi]
-                    for tile_order in union_orders
-                ],
-                throughput=0.0,   # patched to the chip rate below
-                bind_time_s=rep.opt_time_s / len(names),
-                schedule_time_s=0.0,
-            )
-            self._bump_epoch(name)
+            rep = optimize_binding_graph(app, hw, single_order, **task)
+        self._apply_component_result(names, order, offsets, rep)
         return max(float(rep.period), floor)
 
     # -- introspection --------------------------------------------------

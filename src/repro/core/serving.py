@@ -1,0 +1,209 @@
+"""Serving layer: queued admission churn with coalesced rebalances (§5).
+
+The :class:`~repro.core.runtime.AdmissionController` rebalances after
+EVERY admit/evict under ``placement="joint"`` — correct and never-worse
+per event, but at chip scale (32x32, hundreds of tenants) the per-event
+joint re-optimization dominates the event loop, and a burst of K queued
+events pays K rebalances where the LAST one already sees the final
+placement state.  :class:`ServingQueue` batches that work:
+
+  * events (admit / evict / finish) are **submitted** to a queue;
+  * :meth:`ServingQueue.drain` applies them under the controller's
+    :meth:`~repro.core.runtime.AdmissionController.defer_rebalances`
+    window, so each event's placement lands immediately (admission
+    latency stays the cheap free-tile binding) but the joint rebalance
+    is *recorded*, not run;
+  * every ``coalesce_window`` applied events the pending records merge
+    into ONE rebalance (:meth:`~repro.core.runtime.AdmissionController.
+    flush_rebalances`) whose affected region seeds from all recorded
+    apps and freed tiles at once — and whose multi-component region
+    search runs with FUSED scoring (one EdgeStack analysis per
+    optimizer generation for the whole region, see
+    :func:`~repro.core.optimize.optimize_binding_graphs_fused`).
+
+The chip objective still never regresses: every flush's rebalance seeds
+from the then-current bindings and floors at pre-flush component
+periods, exactly like a per-event rebalance would.  What coalescing
+trades away is intermediate placement quality *between* flushes —
+admissions within a window run on their greedy free-tile placement
+until the next flush (the ``degraded_admissions`` the serving benchmark
+counts) — in exchange for an O(window) cut in rebalance work.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+import numpy as np
+
+from .runtime import AdmissionController, AdmissionError
+
+_KINDS = ("admit", "evict", "finish")
+
+
+@dataclasses.dataclass
+class ServiceTicket:
+    """One queued serving request and its outcome.
+
+    ``t_submit``/``t_done`` are ``time.perf_counter()`` stamps; a
+    ticket is *done* once its event has been applied AND the flush
+    covering it has run (the placement it runs under is final), so
+    ``t_done - t_submit`` is the full service latency including the
+    coalescing delay.  ``status`` is ``"pending"`` until drained, then
+    ``"ok"``, ``"rejected"`` (admission refused), or ``"skipped"``
+    (e.g. evicting an app that is not resident).
+    """
+
+    kind: str
+    app: str
+    n_tiles_request: Optional[int] = None
+    t_submit: float = 0.0
+    t_done: float = float("nan")
+    status: str = "pending"
+    error: str = ""
+
+    @property
+    def latency_s(self) -> float:
+        """Submit-to-covered-by-flush seconds (NaN while pending)."""
+        return self.t_done - self.t_submit
+
+
+class ServingQueue:
+    """Burst-mode front-end of one :class:`AdmissionController`.
+
+    ``coalesce_window`` is the flush cadence in applied events: 1
+    degenerates to per-event rebalancing (the controller's normal
+    behaviour, one flush per event), larger windows amortize one region
+    rebalance over the whole window.  ``drain`` is synchronous and
+    deterministic — events apply in submission order, flushes happen at
+    fixed positions — so a replayed trajectory is reproducible.
+    """
+
+    def __init__(
+        self,
+        ctl: AdmissionController,
+        *,
+        coalesce_window: int = 8,
+    ):
+        if coalesce_window < 1:
+            raise ValueError(
+                f"coalesce_window must be >= 1, got {coalesce_window}"
+            )
+        self.ctl = ctl
+        self.coalesce_window = int(coalesce_window)
+        self.tickets: list[ServiceTicket] = []
+        self._queue: list[ServiceTicket] = []
+        self.flushes = 0
+        self.coalesced_events = 0
+        self.degraded_admissions = 0
+
+    # -- submission ------------------------------------------------------
+    def submit(
+        self, kind: str, app: str, *,
+        n_tiles_request: Optional[int] = None,
+    ) -> ServiceTicket:
+        """Queue one event; returns its (pending) ticket."""
+        if kind not in _KINDS:
+            raise ValueError(f"unknown kind {kind!r}; have {_KINDS}")
+        t = ServiceTicket(
+            kind=kind, app=app, n_tiles_request=n_tiles_request,
+            t_submit=time.perf_counter(),
+        )
+        self._queue.append(t)
+        self.tickets.append(t)
+        return t
+
+    def submit_admit(
+        self, app: str, *, n_tiles_request: Optional[int] = None
+    ) -> ServiceTicket:
+        return self.submit("admit", app, n_tiles_request=n_tiles_request)
+
+    def submit_evict(self, app: str) -> ServiceTicket:
+        return self.submit("evict", app)
+
+    @property
+    def pending(self) -> int:
+        """Queued events not yet drained."""
+        return len(self._queue)
+
+    # -- drain -----------------------------------------------------------
+    def _apply(self, t: ServiceTicket) -> None:
+        ctl = self.ctl
+        try:
+            if t.kind == "admit":
+                ctl.admit(t.app, n_tiles_request=t.n_tiles_request)
+                # placement lands greedy (free-tile) now; the joint
+                # rebalance that would refine it is deferred to the
+                # window's flush
+                self.degraded_admissions += 1
+            elif t.kind == "evict":
+                if t.app not in ctl.state.allocated:
+                    t.status = "skipped"
+                    return
+                ctl.evict(t.app)
+            else:
+                if t.app not in ctl.state.allocated:
+                    t.status = "skipped"
+                    return
+                ctl.finish(t.app)
+            t.status = "ok"
+        except AdmissionError as e:
+            t.status = "rejected"
+            t.error = str(e)
+
+    def drain(self) -> dict:
+        """Apply every queued event, flushing each coalescing window.
+
+        Returns a JSON-ready stats dict for this drain call.  Tickets
+        stamp ``t_done`` at their covering flush, so latency includes
+        the coalescing delay.
+        """
+        ctl = self.ctl
+        done: list[ServiceTicket] = []
+        window: list[ServiceTicket] = []
+
+        def _flush() -> None:
+            n = ctl.flush_rebalances()
+            self.flushes += 1
+            self.coalesced_events += max(n - 1, 0)
+            now = time.perf_counter()
+            for t in window:
+                t.t_done = now
+            done.extend(window)
+            window.clear()
+
+        with ctl.defer_rebalances():
+            while self._queue:
+                t = self._queue.pop(0)
+                self._apply(t)
+                window.append(t)
+                if len(window) >= self.coalesce_window:
+                    _flush()
+            if window:
+                _flush()
+        lat = [
+            t.latency_s for t in done
+            if t.kind == "admit" and t.status == "ok"
+        ]
+        return {
+            "processed": len(done),
+            "admitted": sum(
+                1 for t in done if t.kind == "admit" and t.status == "ok"
+            ),
+            "evicted": sum(
+                1 for t in done if t.kind == "evict" and t.status == "ok"
+            ),
+            "rejected": sum(1 for t in done if t.status == "rejected"),
+            "skipped": sum(1 for t in done if t.status == "skipped"),
+            "flushes": self.flushes,
+            "coalesced_events": self.coalesced_events,
+            "degraded_admissions": self.degraded_admissions,
+            "admit_latency_p50_s": (
+                float(np.percentile(lat, 50)) if lat else 0.0
+            ),
+            "admit_latency_p99_s": (
+                float(np.percentile(lat, 99)) if lat else 0.0
+            ),
+        }

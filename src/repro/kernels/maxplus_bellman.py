@@ -1,0 +1,410 @@
+"""Device-resident exact max-plus lambda-search: CSR Bellman-Ford on JAX.
+
+The batched analysis hot path (:func:`repro.core.maxplus.mcr_batch`)
+bisects a per-row lambda and asks, per probe, whether ``weights -
+lam*tokens`` contains a positive cycle — a longest-path Bellman-Ford
+relaxation over the whole EdgeStack.  The numpy ``"edges"`` backend runs
+that host-side, one python-level relaxation round at a time; this module
+executes the WHOLE search as one jitted program (the ``"csr-jit"``
+backend):
+
+  * the bisection state (lo, hi, has_cycle) and the ``(B*n, K)`` distance
+    buffer live on device across all probe rounds — the scratch buffer is
+    donated, so XLA reuses the allocation in place instead of copying it
+    through every loop step;
+  * every relaxation sweep evaluates ``K`` probe lambdas per row at once
+    (a broadcast axis on the edge weights).  The relaxation round count
+    per sweep is pinned at the Bellman-Ford bound (~``n+1``) regardless
+    of how many lambdas ride along, so one K-wide sweep replaces
+    ``log2(K+1)`` binary-bisection sweeps nearly for free — sequential
+    probe rounds drop from ``~log2(range/tol)`` to ``~log_{K+1}``;
+  * rows whose interval already closed start their probes resolved and
+    are masked out of the convergence test, so one slow row never drags
+    the batch through extra relaxation rounds.
+
+Two relaxation layouts, selected per backend:
+
+``"ell"``
+    ELLPACK: incoming edges of every destination node padded to the max
+    in-degree ``d`` — the per-round segment fold becomes a dense
+    ``dist[ell_src] + ww`` gather and a ``max`` over the degree axis.
+    No scatter anywhere; this is what CPU/GPU XLA vectorizes well (the
+    scatter-based ``segment_max`` lowering costs several times a numpy
+    ``reduceat`` per round on CPU).
+
+``"segment"`` / ``"segment-pallas"``
+    Flat dst-sorted CSR folded by :func:`jax.ops.segment_max` (the
+    oracle) or by the Pallas kernel below (TPU: sorted segment ids
+    accumulate through the sequential grid, no padding blow-up when the
+    in-degree distribution is skewed).
+
+Everything here is float64 (``jax.experimental.enable_x64`` scoped to
+these calls): the bisection must resolve 1e-8-class relative tolerances,
+which float32 intervals cannot represent.  Host-side packing (the CSR
+sort, the ELL build, the path bounds) stays in
+:mod:`repro.core.maxplus`; this module is pure array-in/array-out.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+NEG_INF = float("-inf")
+
+#: Probe lambdas evaluated per relaxation sweep (the broadcast axis K).
+#: Sweeps shrink the interval (K+1)x, i.e. sweep count falls log2(K+1)x,
+#: while per-round gather cost grows ~linearly in K — the efficiency
+#: frontier K / log2(K+1) favors small K, but K=1 forfeits the shared
+#: per-sweep costs (convergence checks, cycle certificates, loop
+#: dispatch).  K=3 is the measured sweet spot on CPU; accelerators with
+#: wide vector units amortize larger K.
+DEFAULT_K_PROBES = 3
+
+_LAYOUTS = ("ell", "segment", "segment-pallas")
+
+
+# ======================================================================
+# Pallas segment-max: sorted segment ids, sequential-grid accumulation
+# ======================================================================
+def _segment_max_kernel(cand_ref, seg_ref, out_ref):
+    """Fold edge candidates into their destination segments (max).
+
+    The grid walks edge blocks sequentially (TPU grid order), the output
+    block is the WHOLE (n_segments, K) accumulator (constant index map),
+    so read-modify-write per edge is race-free; block 0 initializes the
+    accumulator to -inf, the (max,+) neutral element.  Padded edge rows
+    carry -inf candidates and segment 0 — they never change a maximum.
+    """
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        out_ref[...] = jnp.full_like(out_ref, NEG_INF)
+
+    def body(i, carry):
+        sid = seg_ref[i]
+        out_ref[sid, :] = jnp.maximum(out_ref[sid, :], cand_ref[i, :])
+        return carry
+
+    jax.lax.fori_loop(0, cand_ref.shape[0], body, 0)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_segments", "block_e", "interpret")
+)
+def segment_max_pallas(
+    cand, seg_ids, *, n_segments: int, block_e: int = 512,
+    interpret: bool = True,
+):
+    """(E, K) candidates + sorted (E,) segment ids -> (n_segments, K) maxima.
+
+    Segments the edges never touch stay at -inf (exactly like
+    ``jax.ops.segment_max``).  ``interpret=True`` runs the kernel body in
+    Python — the CPU validation mode; on TPU pass ``interpret=False``.
+    The whole accumulator must fit one VMEM block, so this kernel is for
+    stacks up to ~10^5 destination keys; the jnp oracle has no such cap.
+    """
+    e, k = cand.shape
+    ep = -(-e // block_e) * block_e
+    if ep != e:
+        cand = jnp.pad(cand, ((0, ep - e), (0, 0)), constant_values=NEG_INF)
+        seg_ids = jnp.pad(seg_ids, (0, ep - e))
+    seg_ids = seg_ids.astype(jnp.int32)
+    return pl.pallas_call(
+        _segment_max_kernel,
+        grid=(ep // block_e,),
+        in_specs=[
+            pl.BlockSpec((block_e, k), lambda b: (b, 0)),
+            pl.BlockSpec((block_e,), lambda b: (b,)),
+        ],
+        out_specs=pl.BlockSpec((n_segments, k), lambda b: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_segments, k), cand.dtype),
+        interpret=interpret,
+    )(cand, seg_ids)
+
+
+# ======================================================================
+# the jitted device-resident bisection
+# ======================================================================
+def csr_bisect(
+    dist0,          # (B*n, K) float64 scratch, donated (contents ignored)
+    operands,       # layout-specific edge arrays, see mcr_bisect_device
+    lo,             # (B,) float64 sound lower bounds
+    hi,             # (B,) float64 interval tops (> any finite cycle ratio)
+    has_cycle,      # (B,) bool rows already known cyclic
+    rel_tol,        # () float64 relative interval tolerance
+    *,
+    n_actors: int,
+    k_probes: int = DEFAULT_K_PROBES,
+    max_steps: int = 40,
+    max_rounds: int = 0,       # relaxation rounds per probe; 0 -> n+1
+    detect_deadlock: bool = False,
+    layout: str = "ell",
+):
+    """Whole-stack lambda bisection, resident on the default device.
+
+    Returns ``(lo, hi, has_cycle, deadlocked)``; the caller's result is
+    ``0.5 * (lo + hi)`` where ``has_cycle`` (and ``inf``/``-inf``
+    elsewhere).  ``upper`` — the per-row simple-path weight bound whose
+    breach flags a pumping positive cycle — is recovered from ``hi``
+    (the host passes ``hi = max(upper, lo) + 1``).  Mirrors
+    :func:`repro.core.maxplus._positive_cycle_masks` exactly, with the
+    K-probe broadcast axis and converged-row masking on top.
+    """
+    b = lo.shape[0]
+    nk = b * n_actors
+    rounds = max_rounds if max_rounds else n_actors + 1
+    check_every = 4                        # relaxation rounds per verdict
+    n_blocks = -(-rounds // check_every)
+    n_doublings = max(1, (n_actors + 1).bit_length())
+    upper = hi - 1.0                       # host invariant: hi = upper' + 1
+    over_node = jnp.repeat(upper, n_actors)[:, None] + 1.0   # (B*n, 1)
+    key_row = jnp.arange(nk, dtype=jnp.int32) // n_actors
+    ids = jnp.arange(nk, dtype=jnp.int32)
+
+    if layout == "ell":
+        ell_src, ell_w, ell_t = operands
+
+        def make_round(lams):
+            # (B*n, 1, K) probe weights fold into the gathered candidates;
+            # XLA fuses the subtraction into the degree-axis reduction, so
+            # nothing (B*n, d, K)-sized is ever materialized
+            lam_key = lams[key_row][:, None, :]
+
+            def best_of(dist):
+                cand = (
+                    dist[ell_src]
+                    + (ell_w[:, :, None] - lam_key * ell_t[:, :, None])
+                )
+                return cand.max(axis=1)
+
+            def witness(dist):
+                cand = (
+                    dist[ell_src]
+                    + (ell_w[:, :, None] - lam_key * ell_t[:, :, None])
+                )
+                amax = cand.argmax(axis=1)                      # (B*n, K)
+                best = jnp.take_along_axis(
+                    cand, amax[:, None, :], axis=1
+                )[:, 0, :]
+                return best, jnp.take_along_axis(ell_src, amax, axis=1)
+
+            return best_of, witness
+    else:
+        src_sorted, dst_sorted, w_sorted, t_sorted, row_sorted = operands
+        src_f = src_sorted.astype(jnp.float64)
+
+        if layout == "segment-pallas":
+            def _segmax(cand):
+                return segment_max_pallas(
+                    cand, dst_sorted, n_segments=nk, interpret=False
+                )
+        else:
+            def _segmax(cand):
+                return jax.ops.segment_max(
+                    cand, dst_sorted, num_segments=nk,
+                    indices_are_sorted=True,
+                )
+
+        def make_round(lams):
+            lam_e = lams[row_sorted]                        # (E_tot, K)
+            ww = w_sorted[:, None] - lam_e * t_sorted[:, None]
+
+            def best_of(dist):
+                return _segmax(dist[src_sorted] + ww)
+
+            def witness(dist):
+                cand = dist[src_sorted] + ww
+                best = _segmax(cand)
+                # second fold recovers a predecessor achieving each max
+                at_max = cand >= best[dst_sorted]
+                psrc = _segmax(
+                    jnp.where(at_max, src_f[:, None], NEG_INF)
+                ).astype(jnp.int32)
+                return best, psrc
+
+            return best_of, witness
+
+    def probe(dist, lams, active):
+        """(B, k) positive-cycle verdicts at per-row probe lambdas.
+
+        Longest-path Bellman-Ford with three resolution rules, applied
+        every ``check_every`` rounds: a probe with no improving node has
+        settled (no positive cycle — the fixpoint is monotone); a node
+        past the simple-path bound can only have been pumped by a
+        positive cycle; and — the rule the numpy backend cannot afford —
+        a cycle in the *tight-edge graph* certifies a (>= 0)-weight
+        cycle right now.  Tight edges point each still-improvable node
+        ``v`` (``best(v) >= dist(v)``) at an argmax predecessor ``p``
+        over the same distance snapshot, so around any cycle of them
+        ``sum(w) = sum(best(v_next) - dist(v)) >= sum(dist(v_next) -
+        dist(v)) = 0``.  (The boundary probe this conflates with
+        "positive" sits within the bisection tolerance by definition.)
+        Pointer doubling finds tight-edge cycles in log2(n) gathers, so
+        positive probes resolve in O(path + cycle hops) rounds instead
+        of pumping distances toward the bound for O(n) rounds — the
+        round count that actually gates every sweep.  The relaxation
+        rounds between checks stay pure gather/max (no argmax, no
+        bookkeeping), which is what keeps them at memory-bandwidth cost.
+        """
+        k = lams.shape[1]
+        best_of, witness = make_round(lams)
+        resolved0 = jnp.broadcast_to(~active[:, None], (b, k))
+        positive0 = jnp.zeros((b, k), dtype=bool)
+        dist = jnp.zeros((nk, k), dtype=dist.dtype) if k != dist.shape[1] \
+            else dist * 0.0
+
+        def cond(carry):
+            _, resolved, _, blk = carry
+            return (blk < n_blocks) & ~resolved.all()
+
+        def body(carry):
+            dist, resolved, positive, blk = carry
+            dist = jax.lax.fori_loop(
+                0, check_every - 1,
+                lambda _, d: jnp.maximum(d, best_of(d)), dist,
+            )
+            # the block's last round doubles as the verdict pass: its
+            # candidate fold is computed once with an argmax witness, so
+            # the checks cost one argmax + log2(n) pointer hops on top of
+            # the relaxation the round does anyway
+            best, psrc = witness(dist)
+            # once a round improves nothing, no later round can
+            improving = (
+                (best > dist + 1e-12).reshape(b, n_actors, k).any(axis=1)
+            )
+            # tight-edge parents: only nodes that can still match or beat
+            # their pre-round distance join the cycle-candidate graph
+            par = jnp.where(best >= dist, psrc, ids[:, None])
+            dist = jnp.maximum(dist, best)
+            over = (dist > over_node).reshape(b, n_actors, k).any(axis=1)
+            anc = par
+            for _ in range(n_doublings):
+                anc = jnp.take_along_axis(anc, anc, axis=0)
+            on_cycle = jnp.take_along_axis(par, anc, axis=0) != anc
+            cyc = on_cycle.reshape(b, n_actors, k).any(axis=1)
+            positive = positive | ((over | cyc) & ~resolved)
+            resolved = resolved | over | cyc | ~improving
+            return dist, resolved, positive, blk + 1
+
+        dist, resolved, positive, _ = jax.lax.while_loop(
+            cond, body, (dist, resolved0, positive0, 0)
+        )
+        # probes still improving after n+1 rounds contain a positive cycle
+        return positive | ~resolved, dist
+
+    deadlocked = jnp.zeros(b, dtype=bool)
+    if detect_deadlock:
+        # any cycle with >= 1 token has ratio <= upper < hi, so a positive
+        # cycle AT lam = hi can only be a zero-token (deadlock) cycle with
+        # positive weight sum — always the case for tau > 0 graphs
+        pos, _ = probe(dist0, hi[:, None], jnp.ones(b, dtype=bool))
+        deadlocked = pos[:, 0]
+
+    frac = jnp.arange(1, k_probes + 1, dtype=lo.dtype) / (k_probes + 1)
+
+    def outer_cond(carry):
+        lo, hi, _, _, step = carry
+        tol = rel_tol * jnp.maximum(1.0, jnp.abs(hi))
+        return (step < max_steps) & ((hi - lo) > tol).any()
+
+    def outer_body(carry):
+        lo, hi, has_cycle, dist, step = carry
+        tol = rel_tol * jnp.maximum(1.0, jnp.abs(hi))
+        active = ((hi - lo) > tol) & ~deadlocked
+        lams = lo[:, None] + (hi - lo)[:, None] * frac[None, :]  # ascending
+        positive, dist = probe(dist, lams, active)
+        # positives form a prefix of the ascending probes (positive iff
+        # lam < rho); the count locates rho in (lams[c-1], lams[c]]
+        c = jnp.sum(positive & active[:, None], axis=1)
+        pick = lambda idx: jnp.take_along_axis(
+            lams, jnp.clip(idx, 0, k_probes - 1)[:, None], axis=1
+        )[:, 0]
+        lo = jnp.where(active & (c > 0), pick(c - 1), lo)
+        hi = jnp.where(active & (c < k_probes), pick(c), hi)
+        has_cycle = has_cycle | (active & (c > 0))
+        return lo, hi, has_cycle, dist, step + 1
+
+    lo, hi, has_cycle, _, _ = jax.lax.while_loop(
+        outer_cond, outer_body, (lo, hi, has_cycle, dist0, 0)
+    )
+    return lo, hi, has_cycle, deadlocked
+
+
+_CSR_STATIC = (
+    "n_actors", "k_probes", "max_steps", "max_rounds",
+    "detect_deadlock", "layout",
+)
+#: Donating the distance scratch lets XLA alias it in place through the
+#: bisection loop on accelerators; CPU buffers are never donatable, so a
+#: separate non-donating entry avoids a warning per call there.
+_csr_bisect_donating = jax.jit(
+    csr_bisect, static_argnames=_CSR_STATIC, donate_argnums=(0,)
+)
+_csr_bisect_plain = jax.jit(csr_bisect, static_argnames=_CSR_STATIC)
+
+
+def mcr_bisect_device(
+    operands, lo, hi, has_cycle,
+    *,
+    n_actors: int,
+    rel_tol: float,
+    k_probes: int = DEFAULT_K_PROBES,
+    max_steps: int = 40,
+    max_rounds: int = 0,
+    detect_deadlock: bool = False,
+    layout: str | None = None,
+):
+    """Host-facing entry: numpy CSR/ELL arrays in, numpy results out.
+
+    ``operands`` is ``(ell_src, ell_w, ell_t)`` for the ``"ell"`` layout
+    (each ``(B*n, d)``) or ``(src, dst, w, tok, row)`` dst-sorted flat
+    arrays for the segment layouts.  Scopes ``enable_x64`` around
+    conversion, tracing and execution so the bisection runs in float64
+    without flipping the process-global jax precision (the Pallas
+    semiring kernels stay float32).  ``layout`` defaults to the Pallas
+    segment kernel on TPU and ELL everywhere else.
+    """
+    from .ops import _on_accelerator, _on_tpu
+
+    if layout is None:
+        layout = "segment-pallas" if _on_tpu() else "ell"
+    assert layout in _LAYOUTS, layout
+    fn = _csr_bisect_donating if _on_accelerator() else _csr_bisect_plain
+    b = int(np.asarray(lo).shape[0])
+    with jax.experimental.enable_x64():
+        if layout == "ell":
+            ell_src, ell_w, ell_t = operands
+            ops_dev = (
+                jnp.asarray(ell_src, dtype=jnp.int32),
+                jnp.asarray(ell_w, dtype=jnp.float64),
+                jnp.asarray(ell_t, dtype=jnp.float64),
+            )
+        else:
+            src, dst, w, tok, row = operands
+            ops_dev = (
+                jnp.asarray(src, dtype=jnp.int32),
+                jnp.asarray(dst, dtype=jnp.int32),
+                jnp.asarray(w, dtype=jnp.float64),
+                jnp.asarray(tok, dtype=jnp.float64),
+                jnp.asarray(row, dtype=jnp.int32),
+            )
+        out = fn(
+            jnp.zeros((b * n_actors, k_probes), dtype=jnp.float64),
+            ops_dev,
+            jnp.asarray(lo, dtype=jnp.float64),
+            jnp.asarray(hi, dtype=jnp.float64),
+            jnp.asarray(has_cycle, dtype=bool),
+            jnp.asarray(rel_tol, dtype=jnp.float64),
+            n_actors=n_actors,
+            k_probes=k_probes,
+            max_steps=max_steps,
+            max_rounds=max_rounds,
+            detect_deadlock=detect_deadlock,
+            layout=layout,
+        )
+        lo, hi, has_cycle, deadlocked = (np.asarray(x) for x in out)
+    return lo, hi, has_cycle, deadlocked

@@ -28,6 +28,19 @@ def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
+def _on_accelerator() -> bool:
+    """Any non-CPU jax device visible (TPU *or* GPU)?
+
+    Backend auto-selection must not key on ``default_backend() == "tpu"``
+    alone: on a CUDA host that test is false and the exact analysis would
+    silently fall back to host numpy.
+    """
+    try:
+        return any(d.platform != "cpu" for d in jax.devices())
+    except Exception:  # pragma: no cover - no backend initialised at all
+        return False
+
+
 def _pad_to(x: jax.Array, mults: tuple[int, ...], fill: float) -> jax.Array:
     pads = []
     for dim, m in zip(x.shape, mults):

@@ -1,0 +1,301 @@
+"""Cross-backend max-plus validation (ISSUE 9): the device-resident
+``"csr-jit"`` lambda-search vs the numpy ``"edges"`` oracle and per-graph
+:func:`mcr_howard`, the deadlock / acyclic conventions, determinism,
+accelerator-aware backend auto-selection, and the dense backend's
+shortcut-derived squaring-round count."""
+
+import dataclasses
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    DYNAP_SE,
+    ChipState,
+    batch_execute,
+    mcr_batch,
+    mcr_howard,
+    partition_greedy,
+    sdfg_from_clusters,
+    small_app,
+    stack_graphs,
+)
+from repro.core import engine as engine_mod
+from repro.core import maxplus as mp
+from repro.core.maxplus import EdgeStack
+from repro.core.sdfg import SDFG, Channel
+from tests._hypothesis_compat import given, settings, st
+
+NEG_INF = float("-inf")
+
+
+def random_live_sdfg(rng: np.random.Generator, n: int) -> SDFG:
+    """Random strongly-cyclic live event graph (as in test_maxplus)."""
+    tau = rng.uniform(0.5, 5.0, size=n)
+    channels = [Channel(i, i, 1, 1.0, kind="self") for i in range(n)]
+    for i in range(n):
+        channels.append(Channel(i, (i + 1) % n, 1 if i == n - 1 else 0, 1.0))
+    for _ in range(int(rng.integers(0, 2 * n))):
+        i, j = int(rng.integers(n)), int(rng.integers(n))
+        if i == j:
+            continue
+        channels.append(
+            Channel(i, j, 1 if j <= i else int(rng.integers(0, 3)), 1.0,
+                    delay=float(rng.uniform(0, 2.0)))
+        )
+    g = SDFG(n_actors=n, exec_time=tau, channels=channels)
+    g.validate()
+    return g
+
+
+def _ring_stack(b: int, n: int, seed: int, *, shortcuts: bool) -> EdgeStack:
+    """Length-n one-token rings, optionally with exact path-doubling
+    shortcut edges (the PR-3 composition: span-s edge = summed w/tokens
+    of the underlying span-s ring path, so the MCR is preserved while
+    the hop diameter collapses to O(log n))."""
+    r = np.random.default_rng(seed)
+    src = np.broadcast_to(np.arange(n), (b, n)).copy()
+    dst = (src + 1) % n
+    tok = np.zeros_like(src)
+    tok[:, -1] = 1
+    w = r.uniform(0.5, 2.0, (b, n))
+    srcs, dsts, toks, ws = [src], [dst], [tok.astype(np.float64)], [w]
+    if shortcuts:
+        cw, ct, nx = w.copy(), tok.astype(np.float64), dst.copy()
+        span = 1
+        while 2 * span < n:
+            cw = cw + np.take_along_axis(cw, nx, axis=1)
+            ct = ct + np.take_along_axis(ct, nx, axis=1)
+            nx = np.take_along_axis(nx, nx, axis=1)
+            span *= 2
+            srcs.append(src)
+            dsts.append(nx.copy())
+            toks.append(ct.copy())
+            ws.append(cw.copy())
+    return EdgeStack(
+        n_actors=n,
+        src=np.concatenate(srcs, axis=1),
+        dst=np.concatenate(dsts, axis=1),
+        tokens=np.concatenate(toks, axis=1).astype(np.int64),
+        weights=np.concatenate(ws, axis=1),
+    )
+
+
+# ======================================================================
+# csr-jit == edges == Howard on random live graphs (property test)
+# ======================================================================
+@settings(max_examples=6, deadline=None)
+@given(st.integers(min_value=0, max_value=10_000))
+def test_csr_jit_matches_edges_and_howard(seed):
+    rng = np.random.default_rng(seed)
+    graphs = [
+        random_live_sdfg(rng, int(rng.integers(3, 14))) for _ in range(5)
+    ]
+    stack = stack_graphs(graphs)
+    pe = mcr_batch(stack, backend="edges", rel_tol=1e-9)
+    pc = mcr_batch(stack, backend="csr-jit", rel_tol=1e-9)
+    howard = np.array([mcr_howard(g) for g in graphs])
+    np.testing.assert_allclose(pc, pe, rtol=1e-8, atol=1e-8)
+    np.testing.assert_allclose(pc, howard, rtol=1e-6, atol=1e-6)
+
+
+def test_csr_jit_deadlocked_rows_report_inf():
+    """A zero-token cycle deadlocks the graph: Howard says inf, and both
+    backends must agree under ``detect_deadlock=True``."""
+    live = SDFG(
+        n_actors=3, exec_time=np.array([1.0, 2.0, 3.0]),
+        channels=[Channel(0, 1, 0, 1.0), Channel(1, 2, 0, 1.0),
+                  Channel(2, 0, 1, 1.0)],
+    )
+    dead = SDFG(
+        n_actors=3, exec_time=np.array([1.0, 2.0, 3.0]),
+        channels=[Channel(0, 1, 0, 1.0), Channel(1, 0, 0, 1.0),
+                  Channel(2, 2, 1, 1.0)],
+    )
+    assert mcr_howard(dead) == np.inf
+    stack = stack_graphs([live, dead, live])
+    pe = mcr_batch(stack, backend="edges", detect_deadlock=True)
+    pc = mcr_batch(stack, backend="csr-jit", detect_deadlock=True)
+    assert pe[1] == np.inf and pc[1] == np.inf
+    np.testing.assert_allclose(pc, pe, rtol=1e-8)
+    np.testing.assert_allclose(pe[[0, 2]], mcr_howard(live), rtol=1e-6)
+
+
+def test_csr_jit_acyclic_rows_report_neg_inf():
+    """Rows with no cycle at all are unbounded: -inf on every backend."""
+    chain = SDFG(
+        n_actors=4, exec_time=np.ones(4),
+        channels=[Channel(0, 1, 1, 1.0), Channel(1, 2, 0, 1.0),
+                  Channel(2, 3, 2, 1.0)],
+    )
+    ring = SDFG(
+        n_actors=4, exec_time=np.ones(4),
+        channels=[Channel(i, (i + 1) % 4, 1 if i == 3 else 0, 1.0)
+                  for i in range(4)],
+    )
+    assert mcr_howard(chain) == NEG_INF
+    stack = stack_graphs([chain, ring, chain])
+    for backend in ("edges", "csr-jit"):
+        p = mcr_batch(stack, backend=backend)
+        assert p[0] == NEG_INF and p[2] == NEG_INF, (backend, p)
+        np.testing.assert_allclose(p[1], mcr_howard(ring), rtol=1e-6)
+
+
+def test_csr_jit_deterministic_and_probe_count_invariant():
+    """Bit-identical across calls, and the multi-lambda probe count is a
+    speed knob, not a semantics knob."""
+    rng = np.random.default_rng(77)
+    stack = stack_graphs(
+        [random_live_sdfg(rng, int(rng.integers(4, 12))) for _ in range(4)]
+    )
+    a = mcr_batch(stack, backend="csr-jit", rel_tol=1e-9)
+    b = mcr_batch(stack, backend="csr-jit", rel_tol=1e-9)
+    np.testing.assert_array_equal(a, b)
+    k1 = mp._mcr_batch_csr(stack, rel_tol=1e-9, k_probes=1)
+    k3 = mp._mcr_batch_csr(stack, rel_tol=1e-9, k_probes=3)
+    np.testing.assert_allclose(k1, k3, rtol=1e-8, atol=1e-8)
+
+
+def test_csr_jit_ignores_neg_inf_padding_rows():
+    """-inf-weight padding slots (index 0-filled) must not create
+    phantom edges — the fused-scoring path depends on this."""
+    rng = np.random.default_rng(5)
+    g = random_live_sdfg(rng, 8)
+    base = stack_graphs([g, g])
+    pad = 7
+    padded = EdgeStack(
+        n_actors=base.n_actors,
+        src=np.pad(base.src, ((0, 0), (0, pad))),
+        dst=np.pad(base.dst, ((0, 0), (0, pad))),
+        tokens=np.pad(base.tokens, ((0, 0), (0, pad)), constant_values=1),
+        weights=np.pad(base.weights, ((0, 0), (0, pad)),
+                       constant_values=NEG_INF),
+    )
+    for backend in ("edges", "csr-jit"):
+        np.testing.assert_allclose(
+            mcr_batch(padded, backend=backend),
+            mcr_batch(base, backend=backend),
+            rtol=1e-9,
+        )
+
+
+# ======================================================================
+# degraded ChipState stacks: dead rows -> inf, throttled links agree
+# ======================================================================
+@pytest.fixture(scope="module")
+def compiled_app():
+    snn = small_app(200, 2600, seed=21)
+    cl = partition_greedy(snn, DYNAP_SE)
+    app = sdfg_from_clusters(cl, hw=DYNAP_SE)
+    rng = np.random.default_rng(11)
+    bindings = np.stack([
+        rng.integers(0, DYNAP_SE.n_tiles, size=app.n_actors)
+        for _ in range(6)
+    ])
+    return app, bindings
+
+
+def test_backends_agree_on_degraded_chip_state(compiled_app):
+    app, bindings = compiled_app
+    state = ChipState(DYNAP_SE)
+    state.fail_tiles([int(bindings[0, 0])])
+    state.throttle_link(0, 1, 3.0)
+    rep_e = batch_execute(app, bindings, DYNAP_SE, backend="edges",
+                          chip_state=state)
+    rep_c = batch_execute(app, bindings, DYNAP_SE, backend="csr-jit",
+                          chip_state=state)
+    dead = state.dead_rows(bindings)
+    assert dead.any() and not dead.all()
+    assert np.isinf(rep_e.periods[dead]).all()
+    assert np.isinf(rep_c.periods[dead]).all()
+    np.testing.assert_allclose(
+        rep_c.periods[~dead], rep_e.periods[~dead], rtol=1e-7
+    )
+
+
+# ======================================================================
+# backend auto-selection (satellite: accelerator-aware, not TPU-only)
+# ======================================================================
+def test_mcr_batch_auto_selects_csr_jit_on_accelerator(monkeypatch):
+    rng = np.random.default_rng(3)
+    stack = stack_graphs([random_live_sdfg(rng, 6)])
+    calls = []
+    real = mp._mcr_batch_csr
+
+    def recording(st_, **kw):
+        calls.append("csr-jit")
+        return real(st_, **kw)
+
+    monkeypatch.setattr(mp, "_mcr_batch_csr", recording)
+    monkeypatch.setattr(mp, "_on_accelerator", lambda: True)
+    out = mcr_batch(stack, backend="auto")
+    assert calls == ["csr-jit"]
+    np.testing.assert_allclose(
+        out, mcr_batch(stack, backend="edges"), rtol=1e-8
+    )
+    # no accelerator -> the numpy oracle, device path untouched
+    calls.clear()
+    monkeypatch.setattr(mp, "_on_accelerator", lambda: False)
+    mcr_batch(stack, backend="auto")
+    assert calls == []
+
+
+def test_engine_resolve_backend_is_accelerator_aware(monkeypatch):
+    """GPU hosts must get the device backend too — the selection predicate
+    is any-non-CPU-device, not TPU-only."""
+    monkeypatch.setattr(engine_mod, "_engine_on_accelerator", lambda: True)
+    assert engine_mod._resolve_backend("auto") == "csr-jit"
+    monkeypatch.setattr(engine_mod, "_engine_on_accelerator", lambda: False)
+    assert engine_mod._resolve_backend("auto") == "edges"
+    # explicit choices always pass through
+    for explicit in ("edges", "csr-jit", "dense"):
+        assert engine_mod._resolve_backend(explicit) == explicit
+
+
+# ======================================================================
+# dense backend: squaring rounds derived from the shortcut-reduced
+# hop diameter (satellite a)
+# ======================================================================
+def test_dense_squaring_rounds_drop_with_shortcut_edges():
+    """With PR-3 path-doubling shortcuts in the stack the max-plus value
+    closure saturates in fewer squarings than the log2(n) cap; without
+    them the ring's hop diameter forces the full cap.  (max_steps is
+    tiny: only the per-step round COUNTS are under test here.)"""
+    n, cap = 32, max(1, int(math.ceil(math.log2(32))))
+    short = _ring_stack(2, n, seed=9, shortcuts=True)
+    plain = _ring_stack(2, n, seed=9, shortcuts=False)
+    mp._mcr_batch_dense(short, max_steps=4)
+    rounds_short = list(mp._DENSE_LAST_ROUNDS)
+    mp._mcr_batch_dense(plain, max_steps=4)
+    rounds_plain = list(mp._DENSE_LAST_ROUNDS)
+    assert rounds_short and rounds_plain
+    assert max(rounds_short + rounds_plain) <= cap
+    assert all(r == cap for r in rounds_plain), rounds_plain
+    assert min(rounds_short) < cap, rounds_short
+
+
+def test_dense_shortcut_stack_same_answer_fewer_rounds():
+    """The early exit must not change the verdict: dense on the shortcut
+    ring matches the edges oracle on the plain ring (the shortcuts are
+    exact compositions, so the MCR is identical)."""
+    short = _ring_stack(2, 16, seed=4, shortcuts=True)
+    plain = _ring_stack(2, 16, seed=4, shortcuts=False)
+    pe = mcr_batch(plain, backend="edges", rel_tol=1e-9)
+    pd = mcr_batch(short, backend="dense", rel_tol=1e-4)
+    np.testing.assert_allclose(pd, pe, rtol=5e-4)
+
+
+def test_maxplus_fixpoint_predicate():
+    a = np.array([[0.0, NEG_INF], [1.5, 2.0]])
+    assert mp._maxplus_fixpoint(a, a.copy())
+    # float32 re-association slack is tolerated
+    assert mp._maxplus_fixpoint(a + 1e-8, a)
+    # value growth is not
+    b = a.copy()
+    b[1, 1] += 1.0
+    assert not mp._maxplus_fixpoint(b, a)
+    # support change is never a fixpoint
+    c = a.copy()
+    c[0, 1] = 3.0
+    assert not mp._maxplus_fixpoint(c, a)
