@@ -178,9 +178,9 @@ def run(out_path: str = "BENCH_admission.json", *, n_apps: int = 6,
     """
     t_rows, t_payload = trajectory_bench(n_apps=n_apps, rounds=rounds)
     s_rows, s_payload, ok = speedup_bench(n_candidates=n_candidates)
-    with open(out_path, "w") as fh:
-        json.dump({"trajectory_bench": t_payload, "speedup_bench": s_payload},
-                  fh, indent=2)
+    from .common import write_bench
+    write_bench(out_path,
+                {"trajectory_bench": t_payload, "speedup_bench": s_payload})
     rows = t_rows + [("--", "--")] + s_rows
     summary = (
         f"{t_payload['n_admissions']} admissions at "

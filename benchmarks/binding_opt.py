@@ -148,9 +148,9 @@ def run(out_path: str = "BENCH_binding_opt.json", *, apps=APP_NAMES,
         apps, population=population, generations=generations
     )
     s_rows, s_payload = scaling_bench(scaling_app, generations=2)
-    with open(out_path, "w") as fh:
-        json.dump({"optimizer_bench": o_payload, "scaling_bench": s_payload},
-                  fh, indent=2)
+    from .common import write_bench
+    write_bench(out_path,
+                {"optimizer_bench": o_payload, "scaling_bench": s_payload})
     need = max(1, (6 * len(apps)) // 8)      # 6-of-8, scaled for --quick
     ok = wins >= need and never_worse
     rows = o_rows + [("--",) * 8] + s_rows

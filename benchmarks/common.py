@@ -5,6 +5,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import json
 import time
 
 import numpy as np
@@ -27,6 +28,44 @@ from repro.core import (
 from repro.core.schedule import random_order_throughput
 
 BINDERS = {"spinemap": bind_spinemap, "pycarl": bind_pycarl, "ours": bind_ours}
+
+
+def device_metadata() -> dict:
+    """Execution-environment stamp for every BENCH_*.json artifact.
+
+    CPU interpret-mode numbers and real-accelerator numbers share one
+    schema, so without this stamp a stored baseline is ambiguous about
+    what produced it.  Records the jax version, backend, device kind and
+    count (forced host devices via ``--xla_force_host_platform_device_
+    count`` show up here), and whether the Pallas kernels run in
+    interpret mode on this host (True everywhere but TPU — see
+    ``repro.kernels.ops``).
+    """
+    import jax
+
+    from repro.kernels.ops import _on_tpu
+
+    devs = jax.devices()
+    return {
+        "jax_version": jax.__version__,
+        "backend": jax.default_backend(),
+        "device_kind": devs[0].device_kind if devs else "none",
+        "device_count": len(devs),
+        "pallas_interpret_mode": not _on_tpu(),
+    }
+
+
+def write_bench(out_path: str, payload: dict) -> None:
+    """Write one BENCH_*.json with the device/backend stamp attached.
+
+    All benchmark mains route their artifact through here: ``payload``
+    gains an ``"env"`` section (:func:`device_metadata`) alongside the
+    benchmark's own sections.
+    """
+    payload = dict(payload)
+    payload["env"] = device_metadata()
+    with open(out_path, "w") as fh:
+        json.dump(payload, fh, indent=2)
 
 
 @functools.lru_cache(maxsize=None)

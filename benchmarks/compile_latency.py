@@ -277,8 +277,8 @@ def run(out_path: str = "BENCH_compile.json", *, smoke: bool = False):
         "cache_bench": cache,
         "ok": ok,
     }
-    with open(out_path, "w") as fh:
-        json.dump(payload, fh, indent=2)
+    from .common import write_bench
+    write_bench(out_path, payload)
 
     gate = "" if smoke else (
         f"largest app {fe['largest_app']} {fe['largest_speedup']:.1f}x "

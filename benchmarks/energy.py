@@ -247,9 +247,9 @@ def run(out_path: str = "BENCH_energy.json", *, smoke: bool = False,
         smoke=smoke, n_apps=n_apps, rounds=rounds,
     )
     p_rows, p_payload, p_ok = pareto_bench(smoke=smoke)
-    with open(out_path, "w") as fh:
-        json.dump({"churn_bench": c_payload, "pareto_bench": p_payload},
-                  fh, indent=2)
+    from .common import write_bench
+    write_bench(out_path,
+                {"churn_bench": c_payload, "pareto_bench": p_payload})
     rows = c_rows + [("--", "--", "--", "--")] + p_rows
     ok = c_ok and p_ok
     summary = (

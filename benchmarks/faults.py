@@ -310,8 +310,8 @@ def faults_bench(
 def run(out_path: str = "BENCH_faults.json", *, smoke: bool = False,
         **kw):
     rows, summary, ok = faults_bench(smoke=smoke, **kw)
-    with open(out_path, "w") as fh:
-        json.dump({"faults_bench": summary}, fh, indent=2)
+    from .common import write_bench
+    write_bench(out_path, {"faults_bench": summary})
     return rows, summary, ok
 
 

@@ -261,8 +261,8 @@ def maxplus_bench(*, smoke: bool = False, seed: int = 0,
 def run(out_path: str = "BENCH_maxplus.json", *, smoke: bool = False,
         **kw):
     rows, summary, ok = maxplus_bench(smoke=smoke, **kw)
-    with open(out_path, "w") as fh:
-        json.dump({"maxplus_backends": summary}, fh, indent=2)
+    from .common import write_bench
+    write_bench(out_path, {"maxplus_backends": summary})
     return rows, summary, ok
 
 

@@ -23,6 +23,17 @@ admissions/s per mode, the per-rebalance never-regress check, flush/
 coalescing counters, and the burst speedup over baseline.  Acceptance:
 burst admissions/s beats the stored pre-refactor burst baseline
 (10.716/s on the reference host) with ``never_regressed`` true.
+
+``--devices N`` adds the device-scaling sweep: for each count ``d`` up
+to ``N`` a SUBPROCESS re-runs the burst mode with
+``XLA_FLAGS=--xla_force_host_platform_device_count=d`` (the flag must
+precede the jax import, hence the subprocess) and a ``host_mesh(d)``
+scoring mesh on the controller, so every rebalance's population scoring
+is sharded d ways.  Per-arm trajectories are bit-identical by the
+``mesh=`` contract — the sweep varies wall-clock only.  A separate
+speculative pre-compilation bench (cold controller, the same churn
+drained in waves through a :class:`~repro.core.serving.PrecompilePool`)
+reports the cache-warm-hit-rate.
 """
 
 from __future__ import annotations
@@ -30,6 +41,10 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import json
+import math
+import os
+import subprocess
+import sys
 import time
 
 import numpy as np
@@ -39,6 +54,7 @@ from repro.core import (
     DYNAP_SE_1024,
     AdmissionController,
     AdmissionError,
+    PrecompilePool,
     ServingQueue,
 )
 from repro.core.workloads import workload_suite
@@ -68,12 +84,13 @@ def _never_regressed(events) -> bool:
     return ok
 
 
-def _make_controller(hw, joint_budget):
+def _make_controller(hw, joint_budget, mesh=None):
     return AdmissionController(
         hw,
         placement="joint",
         joint_budget=joint_budget,
         full_rebalance_every=0,
+        mesh=mesh,
     )
 
 
@@ -154,6 +171,64 @@ def _run_burst(ctl, stream, requests, *, coalesce_window):
     }
 
 
+def _build_workload(smoke, n_tenants, n_events, scale, joint_budget, seed):
+    """Shared deterministic setup: hardware, tenants, churn, design cache."""
+    if smoke:
+        hw = dataclasses.replace(DYNAP_SE, n_tiles=64)
+        n_tenants, n_events = 12, 36
+    else:
+        hw = DYNAP_SE_1024
+    tenants = workload_suite(n_tenants, seed=seed, scale=scale)
+    names = [s.name for s in tenants]
+    stream = _event_stream(names, n_events, seed)
+    requests = {}
+    design_ctl = _make_controller(hw, joint_budget)
+    for snn in tenants:
+        art = design_ctl.register(snn)
+        requests[snn.name] = _tiles_request(art.clustered.n_clusters)
+    return hw, tenants, stream, requests, design_ctl, n_tenants, n_events
+
+
+def _precompile_bench(
+    hw, tenants, stream, requests, *,
+    joint_budget, coalesce_window, waves=4,
+):
+    """Speculative pre-compilation over a COLD controller.
+
+    The same churn drained in ``waves`` batches: each drain first warms
+    the :class:`PrecompilePool`'s frequency-decayed predictions (design
+    artifacts + scoring shape buckets), so admissions of recurring
+    tenants find their design work already done.  Reports the pool's
+    hit/miss accounting — ``hit_rate`` is the cache-warm-hit-rate stat
+    of the device-scaling section.
+    """
+    ctl = _make_controller(hw, joint_budget)
+    pool = PrecompilePool(
+        ctl, source={s.name: s for s in tenants},
+        top_k=max(4, len(tenants) // 8),
+    )
+    q = ServingQueue(ctl, coalesce_window=coalesce_window, precompile=pool)
+    resident: set = set()
+    per_wave = max(1, math.ceil(len(stream) / waves))
+    t0 = time.perf_counter()
+    for w in range(0, len(stream), per_wave):
+        for name in stream[w:w + per_wave]:
+            if name in resident:
+                q.submit_evict(name)
+                resident.discard(name)
+            else:
+                q.submit_admit(name, n_tiles_request=requests[name])
+                resident.add(name)
+        q.drain()
+    loop_s = time.perf_counter() - t0
+    return {
+        "waves": int(math.ceil(len(stream) / per_wave)),
+        "event_loop_s": round(loop_s, 2),
+        "drained": q.pending == 0,
+        **pool.stats(),
+    }
+
+
 def serving_bench(
     *,
     smoke: bool = False,
@@ -163,24 +238,13 @@ def serving_bench(
     joint_budget: tuple[int, int] = (1, 6),
     coalesce_window: int = 16,
     seed: int = 0,
+    devices: int = 0,
 ):
     """Run both modes over the same churn; return ``(rows, payload, ok)``."""
-    if smoke:
-        hw = dataclasses.replace(DYNAP_SE, n_tiles=64)
-        n_tenants, n_events = 12, 36
-    else:
-        hw = DYNAP_SE_1024
-
     t0 = time.perf_counter()
-    tenants = workload_suite(n_tenants, seed=seed, scale=scale)
-    names = [s.name for s in tenants]
-    stream = _event_stream(names, n_events, seed)
-
-    requests = {}
-    design_ctl = _make_controller(hw, joint_budget)
-    for snn in tenants:
-        art = design_ctl.register(snn)
-        requests[snn.name] = _tiles_request(art.clustered.n_clusters)
+    hw, tenants, stream, requests, design_ctl, n_tenants, n_events = (
+        _build_workload(smoke, n_tenants, n_events, scale, joint_budget, seed)
+    )
     design_wall_s = time.perf_counter() - t0
 
     # baseline: fresh controller, per-event rebalancing
@@ -195,6 +259,22 @@ def serving_bench(
         burst_ctl, stream, requests, coalesce_window=coalesce_window
     )
 
+    # speculative pre-compilation: cold controller, wave-drained churn
+    precompile = _precompile_bench(
+        hw, tenants, stream, requests,
+        joint_budget=joint_budget, coalesce_window=coalesce_window,
+    )
+
+    # device-scaling sweep: one subprocess per forced host-device count
+    device_scaling = None
+    if devices > 0:
+        device_scaling = _device_sweep(
+            devices, smoke=smoke, n_tenants=n_tenants, n_events=n_events,
+            scale=scale, joint_budget=joint_budget,
+            coalesce_window=coalesce_window, seed=seed,
+        )
+        device_scaling["cache_warm_hit_rate"] = precompile["hit_rate"]
+
     speedup = (
         burst["admissions_per_s"] / baseline["admissions_per_s"]
         if baseline["admissions_per_s"] > 0 else 0.0
@@ -208,6 +288,8 @@ def serving_bench(
         and burst["never_regressed"]
         and burst["drained"]
         and beats_stored
+        and precompile["drained"]
+        and (device_scaling is None or device_scaling["sweep_ok"])
     )
     summary = {
         "mesh": list(hw.mesh_shape),
@@ -221,11 +303,14 @@ def serving_bench(
         "design_wall_s": round(design_wall_s, 2),
         "baseline": baseline,
         "burst": burst,
+        "precompile": precompile,
         "speedup_burst_vs_baseline": round(speedup, 3),
         "stored_baseline_admissions_per_s": STORED_BASELINE_ADMISSIONS_PER_S,
         "beats_stored_baseline": beats_stored,
         "ok": ok,
     }
+    if device_scaling is not None:
+        summary["device_scaling"] = device_scaling
     rows = [
         ("mode", "events", "admits", "event_loop_s", "admissions_per_s",
          "never_regressed"),
@@ -236,14 +321,118 @@ def serving_bench(
          burst["event_loop_s"], burst["admissions_per_s"],
          burst["never_regressed"]),
     ]
+    if device_scaling is not None:
+        for d, aps in zip(device_scaling["device_counts"],
+                          device_scaling["admissions_per_s"]):
+            rows.append((f"burst@{d}dev", n_events, "-", "-", aps, "-"))
     return rows, summary, ok
+
+
+def _device_counts(n: int) -> list[int]:
+    """1 plus powers of two up to ``n`` (always ending at ``n``)."""
+    return sorted({1} | {d for d in (2, 4, 8, 16) if d <= n} | {int(n)})
+
+
+def _device_arm(
+    d: int, *, smoke, n_tenants, n_events, scale,
+    joint_budget, coalesce_window, seed,
+) -> dict:
+    """One sweep arm — runs INSIDE the forced-device-count subprocess.
+
+    Re-derives the identical workload (same seed), shares the design
+    cache, and drains the burst with a ``host_mesh(d)`` scoring mesh on
+    the controller; ``d == 1`` runs unsharded in the same forced-device
+    environment so every arm pays identical interpreter overheads.
+    """
+    import jax
+
+    from repro.launch.sharding import host_mesh, mesh_devices
+
+    hw, tenants, stream, requests, design_ctl, n_tenants, n_events = (
+        _build_workload(smoke, n_tenants, n_events, scale, joint_budget, seed)
+    )
+    mesh = host_mesh(d) if d > 1 else None
+    ctl = _make_controller(hw, joint_budget, mesh=mesh)
+    ctl.artifacts = design_ctl.artifacts
+    burst = _run_burst(
+        ctl, stream, requests, coalesce_window=coalesce_window
+    )
+    return {
+        "devices_requested": d,
+        "devices_visible": len(jax.devices()),
+        "mesh_devices": len(mesh_devices(mesh)) if mesh is not None else 1,
+        "admissions_per_s": burst["admissions_per_s"],
+        "event_loop_s": burst["event_loop_s"],
+        "admitted": burst["service"]["admitted"],
+        "drained": burst["drained"],
+        "never_regressed": burst["never_regressed"],
+    }
+
+
+def _device_sweep(
+    n_devices: int, *, smoke, n_tenants, n_events, scale,
+    joint_budget, coalesce_window, seed,
+) -> dict:
+    """Admissions/s vs forced host-device count, one subprocess per arm.
+
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=d`` must be set
+    before jax imports, so each arm is a fresh ``benchmarks.serving
+    --arm d`` subprocess printing its result on a ``##ARM`` stdout line.
+    """
+    counts = _device_counts(n_devices)
+    arms = []
+    for d in counts:
+        env = os.environ.copy()
+        env["XLA_FLAGS"] = (
+            env.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={d}"
+        ).strip()
+        cmd = [
+            sys.executable, "-m", "benchmarks.serving", "--arm", str(d),
+            "--tenants", str(n_tenants), "--events", str(n_events),
+            "--scale", str(scale), "--window", str(coalesce_window),
+            "--seed", str(seed),
+        ]
+        if smoke:
+            cmd.append("--smoke")
+        proc = subprocess.run(cmd, capture_output=True, text=True, env=env)
+        arm = None
+        for line in proc.stdout.splitlines():
+            if line.startswith("##ARM "):
+                arm = json.loads(line[len("##ARM "):])
+        if proc.returncode != 0 or arm is None:
+            arm = {
+                "devices_requested": d,
+                "error": (proc.stderr or "no ##ARM output").strip()[-2000:],
+                "admissions_per_s": 0.0,
+                "drained": False,
+                "never_regressed": False,
+            }
+        arms.append(arm)
+    aps = [float(a.get("admissions_per_s", 0.0)) for a in arms]
+    base = aps[0] if aps and aps[0] > 0 else 0.0
+    # 5% tolerance absorbs wall-clock noise on shared CI hosts
+    monotonic = all(b >= a * 0.95 for a, b in zip(aps, aps[1:]))
+    speedup = round(aps[-1] / base, 3) if base else 0.0
+    return {
+        "device_counts": counts,
+        "admissions_per_s": aps,
+        "monotonic_nondecreasing": monotonic,
+        "speedup_at_max_devices": speedup,
+        "target_speedup": 1.5,
+        "target_met": bool(base and speedup >= 1.5),
+        "sweep_ok": all(
+            a.get("drained") and a.get("never_regressed") for a in arms
+        ),
+        "arms": arms,
+    }
 
 
 def run(out_path: str = "BENCH_serving.json", *, smoke: bool = False,
         **kw):
     rows, summary, ok = serving_bench(smoke=smoke, **kw)
-    with open(out_path, "w") as fh:
-        json.dump({"serving_bench": summary}, fh, indent=2)
+    from .common import write_bench
+    write_bench(out_path, {"serving_bench": summary})
     return rows, summary, ok
 
 
@@ -257,11 +446,23 @@ def main() -> None:
     ap.add_argument("--scale", type=float, default=0.06)
     ap.add_argument("--window", type=int, default=16)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--devices", type=int, default=0,
+                    help="device-scaling sweep up to N forced host devices")
+    ap.add_argument("--arm", type=int, default=0, help=argparse.SUPPRESS)
     args = ap.parse_args()
+    if args.arm:
+        arm = _device_arm(
+            args.arm, smoke=args.smoke, n_tenants=args.tenants,
+            n_events=args.events, scale=args.scale, joint_budget=(1, 6),
+            coalesce_window=args.window, seed=args.seed,
+        )
+        print("##ARM " + json.dumps(arm))
+        raise SystemExit(0)
     rows, summary, ok = run(
         args.out, smoke=args.smoke, n_tenants=args.tenants,
         n_events=args.events, scale=args.scale,
         coalesce_window=args.window, seed=args.seed,
+        devices=args.devices,
     )
     for row in rows:
         print(",".join(str(x) for x in row))

@@ -240,8 +240,8 @@ def stress_bench(
 def run(out_path: str = "BENCH_stress.json", *, smoke: bool = False,
         **kw):
     rows, summary, ok = stress_bench(smoke=smoke, **kw)
-    with open(out_path, "w") as fh:
-        json.dump({"stress_bench": summary}, fh, indent=2)
+    from .common import write_bench
+    write_bench(out_path, {"stress_bench": summary})
     return rows, summary, ok
 
 

@@ -105,7 +105,7 @@ from .runtime import (
     single_tile_order,
     verify_deadlock_free,
 )
-from .serving import ServiceTicket, ServingQueue
+from .serving import PrecompilePool, ServiceTicket, ServingQueue
 from .schedule import (
     ExecutionTrace,
     SelfTimedExecutor,

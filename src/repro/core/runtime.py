@@ -461,6 +461,7 @@ class AdmissionEvent:
     region_apps: int = 0           # apps re-optimized by a region rebalance
     app_throughputs: dict = dataclasses.field(default_factory=dict)
     seed_throughput: float = 0.0   # remap events: repaired-seed chip rate
+    reason: str = ""               # reject events: "" (placement) | quota | cancelled
     factor: float = 0.0            # drift/throttle events: applied multiplier
 
 
@@ -537,6 +538,7 @@ class AdmissionController:
         full_rebalance_every: int = 8,
         region_radius: int = 1,
         fused_scoring: bool = True,
+        mesh=None,
     ):
         if placement not in ("isolated", "joint"):
             raise ValueError(
@@ -583,6 +585,10 @@ class AdmissionController:
         # its component searches in lockstep, one fused EdgeStack
         # analysis per generation (see _optimize_region)
         self.fused_scoring = bool(fused_scoring)
+        # scoring mesh: shards every rebalance's population scoring across
+        # its devices (bit-identical to single-device — see
+        # optimize_binding_graph's mesh= contract); None = unsharded
+        self.mesh = mesh
         # rebalance deferral (the serving burst path): while a deferral
         # is active, _rebalance only records the event; flush_rebalances
         # merges all pending events into ONE region rebalance
@@ -718,6 +724,23 @@ class AdmissionController:
         if self.placement == "joint":
             self._rebalance(event_app=art.app)
         return report
+
+    def record_rejection(self, app: str, reason: str) -> "AdmissionEvent":
+        """Stamp a front-end rejection on the trajectory.
+
+        The serving queue refuses some tickets before they ever reach
+        :meth:`admit` — per-tenant quota breaches, cancellations of
+        queued work.  Those decisions still belong on the admission
+        trajectory (the paper's Fig.-11 flow audits EVERY outcome), so
+        the front end records them here with an explicit ``reason``;
+        placement rejections raised by :meth:`admit` itself stamp their
+        events with an empty reason as before.
+        """
+        event = AdmissionEvent(
+            kind="reject", app=app, tiles=[], wall_s=0.0, reason=reason,
+        )
+        self.events.append(event)
+        return event
 
     def _release(self, app: str, kind: str) -> list[int]:
         if app not in self.state.allocated:
@@ -1602,6 +1625,7 @@ class AdmissionController:
                 allowed_tiles=footprint, objective=self.objective,
                 chip_state=self.chip,
                 rate_scale=self._union_rate_scale(arts),
+                mesh=self.mesh,
             )
         union_orders = project_order(order, rep.binding, self.hw.n_tiles)
         thr = (
@@ -1817,7 +1841,7 @@ class AdmissionController:
             tasks.append(task)
             contexts.append(ctx)
         with record_cache_stats(self.cache_stats):
-            reps = optimize_binding_graphs_fused(tasks)
+            reps = optimize_binding_graphs_fused(tasks, mesh=self.mesh)
         for (comp, order, offsets), rep in zip(contexts, reps):
             self._apply_component_result(comp, order, offsets, rep)
 
@@ -1922,7 +1946,9 @@ class AdmissionController:
         hw = task.pop("hw")
         single_order = task.pop("single_order")
         with record_cache_stats(self.cache_stats):
-            rep = optimize_binding_graph(app, hw, single_order, **task)
+            rep = optimize_binding_graph(
+                app, hw, single_order, mesh=self.mesh, **task
+            )
         self._apply_component_result(names, order, offsets, rep)
         return max(float(rep.period), floor)
 

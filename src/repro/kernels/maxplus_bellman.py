@@ -347,6 +347,76 @@ _csr_bisect_donating = jax.jit(
 _csr_bisect_plain = jax.jit(csr_bisect, static_argnames=_CSR_STATIC)
 
 
+def _default_layout(layout: str | None) -> str:
+    from .ops import _on_tpu
+
+    if layout is None:
+        layout = "segment-pallas" if _on_tpu() else "ell"
+    assert layout in _LAYOUTS, layout
+    return layout
+
+
+def _dispatch_bisect(
+    operands, lo, hi, has_cycle,
+    *,
+    n_actors: int,
+    rel_tol: float,
+    k_probes: int,
+    max_steps: int,
+    max_rounds: int,
+    detect_deadlock: bool,
+    layout: str,
+    device=None,
+):
+    """Enqueue one chunk's bisection (inside an ``enable_x64`` scope).
+
+    Returns the four result arrays WITHOUT forcing them to host: jax
+    dispatch is async, so a caller placing successive chunks on different
+    devices overlaps their execution and synchronizes only at the final
+    ``np.asarray`` gather.  ``device=None`` keeps the default placement.
+    """
+    from .ops import _on_accelerator
+
+    fn = _csr_bisect_donating if _on_accelerator() else _csr_bisect_plain
+    b = int(np.asarray(lo).shape[0])
+
+    def put(x, dtype):
+        arr = np.asarray(x, dtype=dtype)
+        return jax.device_put(arr, device) if device is not None \
+            else jnp.asarray(arr)
+
+    if layout == "ell":
+        ell_src, ell_w, ell_t = operands
+        ops_dev = (
+            put(ell_src, np.int32),
+            put(ell_w, np.float64),
+            put(ell_t, np.float64),
+        )
+    else:
+        src, dst, w, tok, row = operands
+        ops_dev = (
+            put(src, np.int32),
+            put(dst, np.int32),
+            put(w, np.float64),
+            put(tok, np.float64),
+            put(row, np.int32),
+        )
+    return fn(
+        put(np.zeros((b * n_actors, k_probes)), np.float64),
+        ops_dev,
+        put(lo, np.float64),
+        put(hi, np.float64),
+        put(has_cycle, bool),
+        put(rel_tol, np.float64),
+        n_actors=n_actors,
+        k_probes=k_probes,
+        max_steps=max_steps,
+        max_rounds=max_rounds,
+        detect_deadlock=detect_deadlock,
+        layout=layout,
+    )
+
+
 def mcr_bisect_device(
     operands, lo, hi, has_cycle,
     *,
@@ -357,6 +427,7 @@ def mcr_bisect_device(
     max_rounds: int = 0,
     detect_deadlock: bool = False,
     layout: str | None = None,
+    device=None,
 ):
     """Host-facing entry: numpy CSR/ELL arrays in, numpy results out.
 
@@ -366,45 +437,71 @@ def mcr_bisect_device(
     conversion, tracing and execution so the bisection runs in float64
     without flipping the process-global jax precision (the Pallas
     semiring kernels stay float32).  ``layout`` defaults to the Pallas
-    segment kernel on TPU and ELL everywhere else.
+    segment kernel on TPU and ELL everywhere else.  ``device`` pins the
+    whole solve to one specific jax device (the sharded path's per-chunk
+    placement); ``None`` keeps the default device.
     """
-    from .ops import _on_accelerator, _on_tpu
-
-    if layout is None:
-        layout = "segment-pallas" if _on_tpu() else "ell"
-    assert layout in _LAYOUTS, layout
-    fn = _csr_bisect_donating if _on_accelerator() else _csr_bisect_plain
-    b = int(np.asarray(lo).shape[0])
+    layout = _default_layout(layout)
     with jax.experimental.enable_x64():
-        if layout == "ell":
-            ell_src, ell_w, ell_t = operands
-            ops_dev = (
-                jnp.asarray(ell_src, dtype=jnp.int32),
-                jnp.asarray(ell_w, dtype=jnp.float64),
-                jnp.asarray(ell_t, dtype=jnp.float64),
-            )
-        else:
-            src, dst, w, tok, row = operands
-            ops_dev = (
-                jnp.asarray(src, dtype=jnp.int32),
-                jnp.asarray(dst, dtype=jnp.int32),
-                jnp.asarray(w, dtype=jnp.float64),
-                jnp.asarray(tok, dtype=jnp.float64),
-                jnp.asarray(row, dtype=jnp.int32),
-            )
-        out = fn(
-            jnp.zeros((b * n_actors, k_probes), dtype=jnp.float64),
-            ops_dev,
-            jnp.asarray(lo, dtype=jnp.float64),
-            jnp.asarray(hi, dtype=jnp.float64),
-            jnp.asarray(has_cycle, dtype=bool),
-            jnp.asarray(rel_tol, dtype=jnp.float64),
-            n_actors=n_actors,
-            k_probes=k_probes,
-            max_steps=max_steps,
-            max_rounds=max_rounds,
-            detect_deadlock=detect_deadlock,
-            layout=layout,
+        out = _dispatch_bisect(
+            operands, lo, hi, has_cycle,
+            n_actors=n_actors, rel_tol=rel_tol, k_probes=k_probes,
+            max_steps=max_steps, max_rounds=max_rounds,
+            detect_deadlock=detect_deadlock, layout=layout, device=device,
         )
         lo, hi, has_cycle, deadlocked = (np.asarray(x) for x in out)
     return lo, hi, has_cycle, deadlocked
+
+
+def mcr_bisect_device_sharded(
+    chunks,
+    devices,
+    *,
+    n_actors: int,
+    rel_tol: float,
+    k_probes: int = DEFAULT_K_PROBES,
+    max_steps: int = 40,
+    max_rounds: int = 0,
+    detect_deadlock: bool = False,
+    layout: str | None = None,
+):
+    """Shard-friendly solve entry: one bisection chunk per mesh device.
+
+    ``chunks`` is a sequence of ``(operands, lo, hi, has_cycle)`` tuples —
+    row-contiguous slices of one batched lambda-search, each packed
+    host-side by :func:`repro.core.maxplus._mcr_batch_csr` — and
+    ``devices`` the matching jax devices (chunk k runs on
+    ``devices[k % len(devices)]``).  Every chunk is DISPATCHED before any
+    is gathered: jax execution is async, so chunks run concurrently
+    across the mesh and the host blocks once, at the ``np.asarray``
+    gather.
+
+    Per-row results are bit-identical to the unsharded solve: the
+    bisection is row-local (each row's probe lambdas depend only on its
+    own interval, and converged rows never move), so splitting the batch
+    changes which rows ride along in a convergence loop but never any
+    row's trajectory.  A chunk whose rows all converge early simply
+    stops — sharding also stops slow rows dragging the whole batch
+    through extra relaxation sweeps.
+
+    Returns concatenated ``(lo, hi, has_cycle, deadlocked)`` rows in
+    chunk order.
+    """
+    assert chunks, "need at least one chunk"
+    layout = _default_layout(layout)
+    devices = list(devices) or [None]
+    with jax.experimental.enable_x64():
+        futs = [
+            _dispatch_bisect(
+                operands, lo, hi, has_cycle,
+                n_actors=n_actors, rel_tol=rel_tol, k_probes=k_probes,
+                max_steps=max_steps, max_rounds=max_rounds,
+                detect_deadlock=detect_deadlock, layout=layout,
+                device=devices[k % len(devices)],
+            )
+            for k, (operands, lo, hi, has_cycle) in enumerate(chunks)
+        ]
+        parts = [tuple(np.asarray(x) for x in out) for out in futs]
+    return tuple(
+        np.concatenate([p[i] for p in parts]) for i in range(4)
+    )
